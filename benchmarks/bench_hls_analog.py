@@ -1,0 +1,63 @@
+"""Paper §7.4: HWTool vs HLS on CONVOLUTION.
+
+The HLS analog on TPU is letting XLA compile the naive jnp convolution
+(the "C-to-gates" path: high-level code, generic compiler). We compare
+(a) the arithmetic the two paths commit to (multiplier count per pixel vs
+XLA's HLO FLOPs per pixel) and (b) CPU wall time of the jitted XLA conv vs
+our Pallas kernel (interpret mode; wall times are only comparable relative
+to each other on this backend).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.apps.convolution import default_kernel
+from repro.kernels.conv2d.ops import conv2d_stencil
+
+
+def _xla_conv(p, k, shift=11):
+    out = jax.lax.conv_general_dilated(
+        p[None, None].astype(jnp.float32), k[None, None].astype(jnp.float32),
+        (1, 1), "VALID")[0, 0]
+    return (out.astype(jnp.int32) >> shift) & 0xFF
+
+
+def run(csv_rows):
+    h, w = 256, 512
+    rng = np.random.RandomState(0)
+    p = rng.randint(0, 256, (h + 7, w + 7)).astype(np.int32)
+    k = default_kernel().astype(np.int32)
+
+    xla = jax.jit(_xla_conv)
+    lowered = jax.jit(_xla_conv).lower(jnp.asarray(p), jnp.asarray(k))
+    cost = lowered.compile().cost_analysis() or {}
+    xla_flops_px = float(cost.get("flops", 0)) / (h * w)
+
+    # our mapped design commits 64 multiplies + 63 adds per pixel at T=1
+    ours_ops_px = 64 + 63
+
+    # wall time (relative only)
+    a = xla(jnp.asarray(p), jnp.asarray(k)).block_until_ready()
+    t0 = time.time()
+    for _ in range(3):
+        a = xla(jnp.asarray(p), jnp.asarray(k)).block_until_ready()
+    t_xla = (time.time() - t0) / 3 * 1e6
+
+    b = conv2d_stencil(p, k)
+    np.asarray(b)
+    t0 = time.time()
+    b = conv2d_stencil(p, k)
+    np.asarray(b)
+    t_ours = (time.time() - t0) * 1e6
+
+    match = np.array_equal(np.asarray(a), np.asarray(b))
+    csv_rows.append(("hls_analog_xla_conv", f"{t_xla:.0f}",
+                     f"flops_per_px={xla_flops_px:.1f}"))
+    csv_rows.append(("hls_analog_hwtool_conv", f"{t_ours:.0f}",
+                     f"ops_per_px={ours_ops_px};bitexact_match={match};"
+                     f"ops_ratio={ours_ops_px / max(xla_flops_px, 1):.2f}"))
+    return csv_rows

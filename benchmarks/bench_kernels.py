@@ -1,0 +1,56 @@
+"""Kernel microbenchmarks: Pallas (interpret) vs jnp oracle, correctness +
+relative wall time."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.conv2d.ops import conv2d_stencil
+from repro.kernels.conv2d.ref import conv2d_ref
+from repro.kernels.flash.ops import flash_attention_tpu
+from repro.kernels.flash.ref import attention_ref
+from repro.kernels.sad.ops import sad_disparity
+from repro.kernels.sad.ref import sad_ref
+
+
+def _time(f, n=3):
+    f()
+    t0 = time.time()
+    for _ in range(n):
+        f()
+    return (time.time() - t0) / n * 1e6
+
+
+def run(csv_rows):
+    rng = np.random.RandomState(0)
+
+    p = rng.randint(0, 256, (135, 519)).astype(np.int32)
+    k = rng.randint(0, 64, (8, 8)).astype(np.int32)
+    ok = np.array_equal(conv2d_stencil(p, k),
+                        conv2d_ref(jnp.asarray(p), jnp.asarray(k)))
+    csv_rows.append(("kernel_conv2d_128x512",
+                     f"{_time(lambda: np.asarray(conv2d_stencil(p, k))):.0f}",
+                     f"allclose={ok}"))
+
+    L = rng.randint(0, 256, (39, 103)).astype(np.int32)
+    R = rng.randint(0, 256, (39, 103)).astype(np.int32)
+    ok = np.array_equal(sad_disparity(L, R, nd=16),
+                        sad_ref(jnp.asarray(L), jnp.asarray(R), nd=16,
+                                bh=8, bw=8))
+    csv_rows.append(("kernel_sad_32x81x16d",
+                     f"{_time(lambda: np.asarray(sad_disparity(L, R, nd=16))):.0f}",
+                     f"allclose={ok}"))
+
+    B, S, H, Hkv, D = 1, 128, 4, 2, 128
+    q = jnp.asarray(rng.randn(B, S, H, D), jnp.float32)
+    kk = jnp.asarray(rng.randn(B, S, Hkv, D), jnp.float32)
+    v = jnp.asarray(rng.randn(B, S, Hkv, D), jnp.float32)
+    out = flash_attention_tpu(q, kk, v, bq=64, bk=64)
+    ok = np.allclose(out, attention_ref(q, kk, v), atol=2e-5)
+    csv_rows.append(("kernel_flash_128x4hx128d",
+                     f"{_time(lambda: np.asarray(flash_attention_tpu(q, kk, v, bq=64, bk=64))):.0f}",
+                     f"allclose={ok}"))
+    return csv_rows

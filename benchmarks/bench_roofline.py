@@ -1,0 +1,37 @@
+"""Roofline table from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Reads artifacts/*.json produced by repro.launch.dryrun and emits one row
+per (arch x shape x mesh): the three roofline terms, the dominant
+bottleneck, and the useful-FLOPs ratio (MODEL_FLOPS / compiled FLOPs)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+
+def rows(art_dir: str = "artifacts", tag: str = "baseline"):
+    out = []
+    for path in sorted(glob.glob(os.path.join(art_dir, f"*__{tag}.json"))):
+        with open(path) as f:
+            a = json.load(f)
+        out.append(a)
+    return out
+
+
+def run(csv_rows, art_dir: str = "artifacts"):
+    arts = rows(art_dir)
+    if not arts:
+        csv_rows.append(("roofline_missing", "0",
+                         "run repro.launch.sweep first"))
+        return csv_rows
+    for a in arts:
+        name = f"roofline_{a['arch']}_{a['shape']}_{a['mesh']}"
+        ratio = a.get("useful_flops_ratio")
+        csv_rows.append((
+            name, "0",
+            f"compute_s={a['compute_s']:.3e};memory_s={a['memory_s']:.3e};"
+            f"collective_s={a['collective_s']:.3e};dominant={a['dominant']};"
+            f"useful_ratio={ratio if ratio is None else round(ratio, 3)};"
+            f"hbm_gb={a.get('hbm_gb')}"))
+    return csv_rows

@@ -1,0 +1,44 @@
+"""Paper fig. 9/10: throughput sweep per pipeline -> resources + cycles,
+with the fig. 10 linearity column (CLBs normalized to the T=1 schedule)."""
+from __future__ import annotations
+
+import time
+from fractions import Fraction
+
+from repro.apps import Convolution, Descriptor, Flow, Stereo
+from repro.core import compile_pipeline
+
+SWEEP = {
+    "convolution": (Convolution, [Fraction(1, 8), Fraction(1, 4),
+                                  Fraction(1, 2), Fraction(1), Fraction(2),
+                                  Fraction(4), Fraction(8)]),
+    "stereo": (Stereo, [Fraction(1, 16), Fraction(1, 8), Fraction(1, 4),
+                        Fraction(1, 2), Fraction(1)]),
+    "flow": (Flow, [Fraction(1, 8), Fraction(1, 4), Fraction(1, 2),
+                    Fraction(1), Fraction(2)]),
+    "descriptor": (Descriptor, [Fraction(1, 4), Fraction(1, 2),
+                                Fraction(1)]),
+}
+
+
+def run(csv_rows):
+    for name, (ctor, ts) in SWEEP.items():
+        designs = []
+        for T in ts:
+            t0 = time.time()
+            d = compile_pipeline(ctor(), T=T)
+            dt = (time.time() - t0) * 1e6
+            designs.append((T, d, dt))
+            r = d.resources
+            csv_rows.append((
+                f"fig9_{name}_T{float(d.T):.3g}", f"{dt:.0f}",
+                f"clbs={r.clbs};dsps={r.dsps};brams={r.brams};"
+                f"cycles={d.cycles_per_frame()};sched_ok={d.check_schedule()}"))
+        # fig 10 normalization (relative to the T=1 schedule)
+        base = next((d for T, d, _ in designs if T == Fraction(1)), None)
+        if base is not None:
+            for T, d, _ in designs:
+                csv_rows.append((
+                    f"fig10_{name}_T{float(d.T):.3g}", "0",
+                    f"rel_clbs={d.resources.clbs / base.resources.clbs:.3f}"))
+    return csv_rows

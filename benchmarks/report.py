@@ -1,0 +1,91 @@
+"""Generate the EXPERIMENTS.md §Dry-run and §Roofline tables from the
+dry-run artifacts.
+
+  PYTHONPATH=src python -m benchmarks.report [artifacts]
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+from collections import defaultdict
+
+
+def load(art_dir: str, tag: str = "baseline"):
+    arts = []
+    for p in sorted(glob.glob(os.path.join(art_dir, f"*__{tag}.json"))):
+        with open(p) as f:
+            arts.append(json.load(f))
+    return arts
+
+
+def fmt_s(x):
+    return f"{x:.2e}"
+
+
+def main():
+    art_dir = sys.argv[1] if len(sys.argv) > 1 else "artifacts"
+    arts = load(art_dir)
+    by_cell = defaultdict(dict)
+    for a in arts:
+        by_cell[(a["arch"], a["shape"])][a["mesh"]] = a
+
+    print("### Dry-run (single-pod 16x16 = 256 chips; multi-pod 2x16x16 = "
+          "512 chips)\n")
+    print("| arch | shape | mesh | compile | HBM GB/dev | fits 16G | "
+          "FLOPs/dev | bytes/dev | coll bytes/dev | top collectives |")
+    print("|---|---|---|---|---|---|---|---|---|---|")
+    for (arch, shape), meshes in sorted(by_cell.items()):
+        for mesh, a in sorted(meshes.items()):
+            coll = {k: v for k, v in a["collectives"].items()
+                    if k != "total" and v > 0}
+            top = ",".join(f"{k.split('-')[-1]}:{v:.1e}"
+                           for k, v in sorted(coll.items(),
+                                              key=lambda kv: -kv[1])[:2])
+            print(f"| {arch} | {shape} | {mesh} | "
+                  f"{a['t_compile_s']:.0f}s | {a.get('hbm_gb', '?')} | "
+                  f"{'Y' if a.get('fits_hbm_16g') else 'N'} | "
+                  f"{a['flops_per_device']:.2e} | "
+                  f"{a['bytes_per_device']:.2e} | "
+                  f"{a['collective_bytes_per_device']:.2e} | {top} |")
+
+    print("\n### Roofline (per chip, v5e: 197 TF/s bf16, 819 GB/s HBM, "
+          "~50 GB/s ICI) — single-pod mesh\n")
+    print("| arch | shape | compute s | memory s | collective s | dominant "
+          "| useful FLOPs ratio | note |")
+    print("|---|---|---|---|---|---|---|---|")
+    for (arch, shape), meshes in sorted(by_cell.items()):
+        a = meshes.get("16x16")
+        if not a:
+            continue
+        ratio = a.get("useful_flops_ratio")
+        r = "-" if ratio is None else f"{ratio:.3f}"
+        dom = a["dominant"]
+        terms = {"compute": a["compute_s"], "memory": a["memory_s"],
+                 "collective": a["collective_s"]}
+        second = sorted(terms.items(), key=lambda kv: -kv[1])[1]
+        note = (f"{dom}-bound ({terms[dom] / max(second[1], 1e-12):.1f}x "
+                f"over {second[0]})")
+        print(f"| {arch} | {shape} | {fmt_s(a['compute_s'])} | "
+              f"{fmt_s(a['memory_s'])} | {fmt_s(a['collective_s'])} | "
+              f"{dom} | {r} | {note} |")
+
+    print("\n### Mapper decisions (meets-or-exceeds fallbacks)\n")
+    seen = set()
+    for a in arts:
+        for d in a.get("mapper_decisions", []):
+            key = (a["arch"], d)
+            if key not in seen:
+                seen.add(key)
+    by_arch = defaultdict(list)
+    for arch, d in sorted(seen):
+        by_arch[arch].append(d)
+    for arch, ds in sorted(by_arch.items()):
+        print(f"- **{arch}**:")
+        for d in ds:
+            print(f"  - {d}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,30 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    from benchmarks import (bench_fifo, bench_hls_analog, bench_kernels,
+                            bench_roofline, bench_schedule_range)
+    rows = []
+    benches = [
+        ("schedule_range (paper fig 9/10)", bench_schedule_range.run),
+        ("fifo auto-vs-manual (paper fig 11)", bench_fifo.run),
+        ("hls analog (paper §7.4)", bench_hls_analog.run),
+        ("kernels", bench_kernels.run),
+        ("roofline (dry-run artifacts)", bench_roofline.run),
+    ]
+    for name, fn in benches:
+        print(f"# running {name}", file=sys.stderr, flush=True)
+        try:
+            fn(rows)
+        except Exception as e:  # keep the harness going; report the failure
+            rows.append((f"FAILED_{name.split()[0]}", "0", repr(e)[:200]))
+    print("name,us_per_call,derived")
+    for r in rows:
+        print(",".join(str(x) for x in r))
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,12 @@
+"""Batched serving example: greedy decode on the reduced granite-MoE
+family model (router + expert dispatch on the decode path).
+
+    PYTHONPATH=src python examples/serve_moe.py
+"""
+import subprocess
+import sys
+
+subprocess.run([sys.executable, "-m", "repro.launch.serve",
+                "--arch", "granite-moe-3b-a800m", "--smoke",
+                "--batch", "4", "--prompt-len", "16", "--gen", "24"],
+               check=True)

@@ -1,0 +1,12 @@
+"""The paper's four evaluation pipelines (§7), written in HWImg."""
+from .convolution import Convolution, golden_convolution  # noqa: F401
+from .stereo import Stereo, golden_stereo  # noqa: F401
+from .flow import Flow, golden_flow  # noqa: F401
+from .descriptor import Descriptor, golden_descriptor  # noqa: F401
+
+PIPELINES = {
+    "convolution": Convolution,
+    "stereo": Stereo,
+    "flow": Flow,
+    "descriptor": Descriptor,
+}

@@ -1,0 +1,21 @@
+"""repro.core — faithful reproduction of HWTool (Hegarty et al., 2021).
+
+Public surface:
+  dtypes   — HWImg type system (fig. 2)
+  hwimg    — the embedded image-processing language (§3)
+  executor — bit-accurate reference semantics ("Verilator analog", §6)
+  rigel    — Rigel2 IR: schedule/interface types, module model (§4)
+  schedule — trace model F_L(t), burst fitting (§4.2-4.3)
+  buffers  — FIFO allocation via register minimization, Z3/LP (§4.2)
+  mapper   — local meets-or-exceeds mapping + conversions (§5)
+  compile  — end-to-end compile driver
+"""
+from .compile import HWDesign, compile_pipeline  # noqa: F401
+from .dtypes import (Array2d, ArrayT, Bits, Bool, Float, Int, SparseT,  # noqa
+                     TupleT, UInt)
+from .hwimg import (Abs, AbsDiff, Add, AddAsync, AddMSBs, And, ArgMin,  # noqa
+                    Concat, Const, Crop, Downsample, External, FanIn, FanOut,
+                    Filter, FloatAdd, FloatDiv, FloatMul, FloatSqrt, FloatSub,
+                    Gt, Input, Map, Max, Min, Mul, Pad, PointFn, Reduce,
+                    ReducePatch, RemoveMSBs, Replicate, Rshift, SparseTake,
+                    Stack, Stencil, Sub, ToFloat, UserFunction, Upsample, Val)

@@ -1,0 +1,260 @@
+"""Top-level HWTool compile driver.
+
+compile_pipeline(uf, T) runs the full paper flow:
+  1. pipeline interface solve (Static vs Stream, §5.1)
+  2. SDF rate propagation (§4.1)
+  3. local mapping of every operator, meets-or-exceeds (§5.2)
+  4. automatic interface conversion insertion (§5.3)
+  5. FIFO buffer allocation via register minimization (§4.2-4.3)
+
+and returns an HWDesign with the module netlist, solved FIFOs, resource and
+cycle-count report, and a bit-accurate executable (executor.py).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from fractions import Fraction
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from . import buffers as buf
+from . import schedule as sched
+from .executor import evaluate
+from .hwimg import UserFunction, Val, toposort
+from .mapper import (MAPPERS, WIRING_OPS, Site, make_converter, make_fanout,
+                     solve_interface, solve_rates)
+from .rigel import (Interface, Resources, RModule, STATIC, STREAM,
+                    fifo_resources)
+
+
+@dataclass
+class HWDesign:
+    name: str
+    T: Fraction                       # requested input throughput (px/cycle)
+    kind: str                         # STATIC or STREAM pipeline
+    modules: List[RModule]
+    edges: List[buf.Edge]
+    fifo: Optional[buf.BufferSolution]
+    out_module: int
+    out_tokens_per_frame: int
+    in_val: Val
+    out_val: Val
+    notes: List[str] = field(default_factory=list)
+
+    # ---- reports ----
+    @property
+    def resources(self) -> Resources:
+        total = Resources()
+        for m in self.modules:
+            total = total + m.resources
+        if self.fifo is not None:
+            for (s, d), depth in self.fifo.depth.items():
+                total = total + fifo_resources(depth,
+                                               self.edges_map[(s, d)].token_bits)
+        return total
+
+    @property
+    def edges_map(self) -> Dict[Tuple[int, int], buf.Edge]:
+        return {(e.src, e.dst): e for e in self.edges}
+
+    def cycles_per_frame(self) -> int:
+        """End-to-end cycles for one frame (paper fig. 9 'Cycles' column)."""
+        m = self.modules[self.out_module]
+        s = self.fifo.start[self.out_module] if self.fifo else 0
+        return sched.finish_cycle(m.rate, m.latency, s,
+                                  self.out_tokens_per_frame)
+
+    def check_schedule(self, horizon: Optional[int] = None) -> bool:
+        """Deadlock / starvation check: along every edge the consumer's
+        consumption trace must never exceed what the producer (plus FIFO
+        slack) has made available (§4.2)."""
+        if self.fifo is None:
+            return True
+        h = horizon or min(self.cycles_per_frame() + 16, 200_000)
+        t = np.arange(h, dtype=np.int64)
+        ok = True
+        for e in self.edges:
+            p, c = self.modules[e.src], self.modules[e.dst]
+            sp, sc = self.fifo.start[e.src], self.fifo.start[e.dst]
+            # compare in scalar (pixel-payload) units: producer tokens carry
+            # V_p scalars, consumer tokens V_c — conversions preserve scalars
+            vp = p.iface_out.sched.v
+            ci = (c.iface_in or c.iface_out).sched
+            vc = ci.v
+            # rate-changing consumers (pad/crop/reduce) consume at
+            # out_rate * in_tokens / out_tokens
+            co = c.iface_out.sched
+            cons_rate = c.rate * Fraction(ci.tokens_per_frame,
+                                          co.tokens_per_frame)
+            cons_rate = min(cons_rate, Fraction(1))
+            prod_px = (sched.trace(p.rate, p.latency, sp, t)
+                       + e.src_burst) * vp
+            cons_px = sched.consumption_trace(cons_rate, sc, t) * vc
+            cap_px = min(len(cons_px), len(prod_px))
+            if np.any(cons_px[:cap_px] > prod_px[:cap_px] + vp):
+                ok = False
+        return ok
+
+    def run(self, inputs: Dict[str, np.ndarray]):
+        """Bit-accurate execution (Verilator analog)."""
+        return evaluate(self.out_val, inputs)
+
+    def report(self) -> str:
+        r = self.resources
+        lines = [f"== {self.name}  T={float(self.T):.3g}px/cyc  {self.kind} "
+                 f"pipeline ==",
+                 f" modules={len(self.modules)} "
+                 f"CLBs={r.clbs} DSPs={r.dsps} BRAMs={r.brams} "
+                 f"cycles/frame={self.cycles_per_frame()}",
+                 f" fifo_bits={self.fifo.total_bits if self.fifo else 0} "
+                 f"(solver={self.fifo.solver if self.fifo else '-'})"]
+        for i, m in enumerate(self.modules):
+            s = self.fifo.start[i] if self.fifo else 0
+            lines.append(f"  [{i:3d}] s={s:6d} {m!r}")
+        return "\n".join(lines)
+
+
+def compile_pipeline(uf: UserFunction, T: Fraction = Fraction(1),
+                     fifo_solver: str = "z3",
+                     include_burst: bool = True,
+                     manual_fifo_overrides: Optional[Dict[str, int]] = None,
+                     ) -> HWDesign:
+    """The full HWTool flow for one pipeline at target throughput T.
+
+    ``fifo_solver``: "z3" (paper), "lp", or "asap".
+    ``include_burst=False`` + overrides reproduce *manual* FIFO allocation
+    (paper §7.2/§7.3): the user zeroes burst slack on modules whose bursts
+    are absorbed elsewhere (e.g. pad/crop backed by AXI DMA).
+    """
+    T = Fraction(T)
+    inp, out = uf.build()
+    kind = solve_interface(out)
+    # SDF rate normalization (paper §7.1: "HWTool does not produce hardware
+    # at exactly the T requested"): scale the input throughput down so that
+    # no site's pixel rate exceeds 1 px/cycle per minimum-size instance.
+    # This is why the paper's CONVOLUTION runs at T=0.98, not 1.0 — its Pad
+    # amplifies the pixel count by 2106368/2073600.
+    raw = solve_rates(out, Fraction(1))
+    max_ratio = max([r for r in raw.values() if r > 0] or [Fraction(1)])
+    T_eff = T / max_ratio if max_ratio > 1 else T
+    rates = solve_rates(out, T_eff)
+
+    order = [v for v in toposort(out)]
+    # resolve wiring ops (Concat / TupleIndex / FanOut / FanIn) to their
+    # producing value: they become wires (FanOut modules are re-inserted
+    # explicitly below for every multi-consumer producer)
+    resolved: Dict[int, Val] = {}
+
+    def resolve(v: Val) -> Val:
+        if v.uid in resolved:
+            return resolved[v.uid]
+        r = v
+        if v.op in ("TupleIndex",):
+            src = resolve(v.inputs[0])
+            if src.op in ("Concat", "FanOut"):
+                i = v.p["i"]
+                r = resolve(src.inputs[i if src.op == "Concat" else 0])
+            else:
+                r = src
+        elif v.op in ("FanIn",):
+            r = resolve(v.inputs[0])
+        resolved[v.uid] = r
+        return r
+
+    real_nodes = [v for v in order
+                  if v.op not in WIRING_OPS and resolve(v) is v]
+
+    # --- map every real node locally (§5.2) ---
+    modules: List[RModule] = []
+    node_to_mod: Dict[int, int] = {}
+    notes: List[str] = []
+    for v in real_nodes:
+        in_rate = rates[resolve(v.inputs[0]).uid] if v.inputs else Fraction(0)
+        site = Site(v, rates[v.uid], in_rate, kind)
+        m = MAPPERS[v.op](v, site)
+        node_to_mod[v.uid] = len(modules)
+        modules.append(m)
+        if m.iface_out.kind == STREAM and kind == STATIC:
+            kind = STREAM  # §5.1: halt-and-mark (defensive; solve above)
+
+    # --- wire edges through resolved values; insert conversions (§5.3) ---
+    consumers: Dict[int, List[Tuple[Val, int]]] = {}
+    for v in real_nodes:
+        for i in v.inputs:
+            src = resolve(i)
+            if src.op == "Const":
+                continue  # register banks need no FIFO / conversion
+            consumers.setdefault(src.uid, []).append((v, node_to_mod[v.uid]))
+
+    edges: List[buf.Edge] = []
+    for src_uid, cons in consumers.items():
+        pi = node_to_mod[src_uid]
+        prod = modules[pi]
+        tail = pi
+        if len(cons) > 1:
+            fo = make_fanout(prod, len(cons), kind)
+            fo.src_uid = None
+            modules.append(fo)
+            edges.append(buf.Edge(pi, len(modules) - 1,
+                                  prod.iface_out.sched.token_bits,
+                                  prod.latency, prod.burst))
+            tail = len(modules) - 1
+            notes.append(f"inserted FanOut({len(cons)}) after {prod.name}")
+        for cv, ci in cons:
+            cons_mod = modules[ci]
+            want = cons_mod.iface_in.sched.v if cons_mod.iface_in else \
+                cons_mod.iface_out.sched.v
+            conv = make_converter(modules[tail], want, kind)
+            head = tail
+            if conv is not None:
+                modules.append(conv)
+                edges.append(buf.Edge(head, len(modules) - 1,
+                                      modules[head].iface_out.sched.token_bits,
+                                      modules[head].latency,
+                                      modules[head].burst))
+                head = len(modules) - 1
+                notes.append(f"inserted {conv.name} {modules[tail].iface_out.sched.v}"
+                             f"->{want} before {cons_mod.name}")
+            edges.append(buf.Edge(head, ci,
+                                  modules[head].iface_out.sched.token_bits,
+                                  modules[head].latency, modules[head].burst))
+
+    # --- AXI DMA sink (paper §6: the testbench simulates the AXI memory
+    # system). The sink consumes the pipeline output at its steady rate, so
+    # bursty tail modules (Crop) get an isolating FIFO in auto mode. ---
+    out_res0 = resolve(out)
+    om = node_to_mod[out_res0.uid]
+    sink = RModule("axi_dma", "Sink", modules[om].iface_out,
+                   modules[om].iface_out, modules[om].rate, 0,
+                   resources=Resources(luts=64, regs=64))
+    modules.append(sink)
+    edges.append(buf.Edge(om, len(modules) - 1,
+                          modules[om].iface_out.sched.token_bits,
+                          modules[om].latency, modules[om].burst))
+
+    # --- manual FIFO overrides (§7.2-7.3): the designer replaces the burst
+    # slack of named modules (e.g. zero for pad/crop whose bursts are
+    # absorbed by the AXI DMA, or an enlarged Filter FIFO in DESCRIPTOR) ---
+    if manual_fifo_overrides:
+        edges = [
+            buf.Edge(e.src, e.dst, e.token_bits, e.src_latency,
+                     manual_fifo_overrides.get(modules[e.src].name,
+                                               e.src_burst))
+            for e in edges
+        ]
+
+    # --- FIFO allocation (§4.2-4.3) ---
+    fifo = buf.solve_buffers(len(modules), edges, solver=fifo_solver,
+                             include_burst=include_burst)
+
+    out_res = resolve(out)
+    out_mod = node_to_mod[out_res.uid]
+    out_sched = modules[out_mod].iface_out.sched
+    if T_eff != T:
+        notes.append(f"SDF normalization: requested T={float(T):.4g} -> "
+                     f"effective T={float(T_eff):.4g} (max ratio "
+                     f"{float(max_ratio):.5g})")
+    return HWDesign(uf.name, T_eff, kind, modules, edges, fifo, out_mod,
+                    out_sched.tokens_per_frame, inp, out, notes)

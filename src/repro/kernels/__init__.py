@@ -1,0 +1,14 @@
+"""Pallas TPU kernels for the compute hot-spots.
+
+Each kernel lives in a subpackage: kernel.py (pl.pallas_call + BlockSpec),
+ops.py (jit'd public wrapper), ref.py (pure-jnp oracle). Kernels TARGET TPU
+(VMEM BlockSpecs, MXU/VPU-aligned tiles) and are VALIDATED in interpret mode
+on CPU.
+
+The paper connection (DESIGN.md §2): the solved vector width of a Rigel2
+module becomes the lane-aligned tile width; the stencil line buffer becomes
+the row-strip halo block; the FIFO solve sizes double-buffer depths.
+"""
+from .conv2d.ops import conv2d_stencil  # noqa: F401
+from .sad.ops import sad_disparity  # noqa: F401
+from .flash.ops import flash_attention_tpu  # noqa: F401

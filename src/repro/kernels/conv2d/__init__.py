@@ -1,0 +1,1 @@
+from .ops import conv2d_stencil  # noqa: F401

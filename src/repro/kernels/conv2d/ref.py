@@ -1,0 +1,21 @@
+"""Pure-jnp oracle for the 8x8 stencil convolution kernel.
+
+Contract ("valid" convolution on a pre-padded image):
+    out[y, x] = (sum_{dy,dx} P[y+dy, x+dx] * K[dy,dx]) >> shift  (mod 256)
+with P of shape (H + KH - 1, W + KW - 1) int32, out (H, W) int32.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def conv2d_ref(p: jnp.ndarray, k: jnp.ndarray, shift: int = 11
+               ) -> jnp.ndarray:
+    kh, kw = k.shape
+    h = p.shape[0] - kh + 1
+    w = p.shape[1] - kw + 1
+    acc = jnp.zeros((h, w), jnp.int32)
+    for dy in range(kh):
+        for dx in range(kw):
+            acc = acc + k[dy, dx] * p[dy:dy + h, dx:dx + w]
+    return (acc >> shift) & 0xFF

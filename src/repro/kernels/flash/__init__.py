@@ -1,0 +1,1 @@
+from .ops import flash_attention_tpu, flash_decode_tpu  # noqa: F401

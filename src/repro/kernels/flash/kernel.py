@@ -1,0 +1,102 @@
+"""Pallas TPU kernel: flash attention (prefill) with online softmax.
+
+Grid (B*H, Sq/BQ, Skv/BK); the KV axis is innermost so the (m, l, acc)
+scratch persists across KV steps in VMEM (the canonical TPU flash layout).
+Block shapes are MXU-aligned: BQ x D and BK x D tiles with D a multiple of
+128 lanes, BQ/BK multiples of 8 sublanes. GQA is expressed in the K/V
+BlockSpec index map (q head h reads kv head h // G) — no repeated KV in
+HBM.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+try:  # TPU scratch memory spaces (importable on CPU for interpret mode)
+    from jax.experimental.pallas import tpu as pltpu
+    _SCRATCH = lambda shape: pltpu.VMEM(shape, jnp.float32)
+except Exception:  # pragma: no cover
+    _SCRATCH = lambda shape: pl.MemorySpace.ANY(shape, jnp.float32)
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  bq: int, bk: int, nk: int, causal: bool, window,
+                  skv: int, scale: float):
+    ik = pl.program_id(2)
+    iq = pl.program_id(1)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr[...], -1e30)
+        l_scr[...] = jnp.zeros_like(l_scr[...])
+        acc_scr[...] = jnp.zeros_like(acc_scr[...])
+
+    q = q_ref[0]                              # (bq, d)
+    k = k_ref[0]                              # (bk, d)
+    v = v_ref[0]                              # (bk, d)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    q_pos = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    k_pos = ik * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = k_pos < skv
+    if causal:
+        mask = mask & (k_pos <= q_pos)
+    if window is not None:
+        mask = mask & (k_pos > q_pos - window)
+    s = s + jnp.where(mask, 0.0, -1e30)
+
+    m_prev = m_scr[:, :1]                     # (bq, 1)
+    l_prev = l_scr[:, :1]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_new = l_prev * corr + p.sum(axis=-1, keepdims=True)
+    pv = jax.lax.dot_general(p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    acc_scr[...] = acc_scr[...] * corr + pv
+    m_scr[...] = jnp.broadcast_to(m_new, m_scr.shape)
+    l_scr[...] = jnp.broadcast_to(l_new, l_scr.shape)
+
+    @pl.when(ik == nk - 1)
+    def _finish():
+        o_ref[0] = (acc_scr[...]
+                    / jnp.maximum(l_scr[:, :1], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "bq", "bk",
+                                             "g", "interpret"))
+def flash_bhsd(q, k, v, *, causal: bool, window, bq: int, bk: int, g: int,
+               interpret: bool = True):
+    """q: (BH, Sq, D) with BH = B*H; k/v: (BHkv, Skv, D). g = H // Hkv."""
+    bh, sq, d = q.shape
+    _, skv, _ = k.shape
+    nq = math.ceil(sq / bq)
+    nk = math.ceil(skv / bk)
+    sq_pad, skv_pad = nq * bq, nk * bk
+    if sq_pad != sq:
+        q = jnp.pad(q, ((0, 0), (0, sq_pad - sq), (0, 0)))
+    if skv_pad != skv:
+        k = jnp.pad(k, ((0, 0), (0, skv_pad - skv), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, skv_pad - skv), (0, 0)))
+    grid = (bh, nq, nk)
+    out = pl.pallas_call(
+        functools.partial(_flash_kernel, bq=bq, bk=bk, nk=nk, causal=causal,
+                          window=window, skv=skv,
+                          scale=1.0 / math.sqrt(d)),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda h, i, j: (h, i, 0)),
+            pl.BlockSpec((1, bk, d), lambda h, i, j, g=g: (h // g, j, 0)),
+            pl.BlockSpec((1, bk, d), lambda h, i, j, g=g: (h // g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda h, i, j: (h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, sq_pad, d), q.dtype),
+        scratch_shapes=[_SCRATCH((bq, 128)), _SCRATCH((bq, 128)),
+                        _SCRATCH((bq, d))],
+        interpret=interpret,
+    )(q, k, v)
+    return out[:, :sq]

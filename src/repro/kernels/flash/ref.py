@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for the flash attention kernel: full-softmax GQA
+attention with optional causal mask and sliding window."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal: bool = True, window=None):
+    """q: (B, Sq, H, D); k/v: (B, Skv, Hkv, D). f32 math."""
+    B, Sq, H, D = q.shape
+    _, Skv, Hkv, _ = k.shape
+    G = H // Hkv
+    qg = q.astype(jnp.float32).reshape(B, Sq, Hkv, G, D)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k.astype(jnp.float32))
+    s = s / math.sqrt(D)
+    q_pos = jnp.arange(Sq)
+    k_pos = jnp.arange(Skv)
+    mask = jnp.ones((Sq, Skv), bool)
+    if causal:
+        mask = mask & (k_pos[None] <= q_pos[:, None])
+    if window is not None:
+        mask = mask & (k_pos[None] > q_pos[:, None] - window)
+    s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", p, v.astype(jnp.float32))
+    return o.reshape(B, Sq, H, D)

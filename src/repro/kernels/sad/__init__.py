@@ -1,0 +1,1 @@
+from .ops import sad_disparity  # noqa: F401

@@ -1,0 +1,59 @@
+"""Pallas TPU kernel: STEREO SAD block matching over nd disparities.
+
+Row-strip tiling like conv2d (two strips = strip + halo); the disparity
+loop and the 8x8 tap loops are unrolled inside the kernel, keeping the
+(TILE_ROWS, W) working set resident in VMEM — the TPU analog of the
+paper's fully-unrolled stereo array at T=1 (fig. 9), where the vector
+width maps to the 128-lane W dimension.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE_ROWS = 8
+
+
+def _sad_kernel(l_cur, l_nxt, r_cur, r_nxt, o_ref, *, nd, bh, bw, w_out):
+    lf = jnp.concatenate([l_cur[...], l_nxt[...]], axis=0)
+    rf = jnp.concatenate([r_cur[...], r_nxt[...]], axis=0)
+    big = jnp.iinfo(jnp.int32).max
+    best = jnp.full((TILE_ROWS, w_out), big, jnp.int32)
+    best_d = jnp.zeros((TILE_ROWS, w_out), jnp.int32)
+    for d in range(nd):
+        acc = jnp.zeros((TILE_ROWS, w_out), jnp.int32)
+        for dy in range(bh):
+            lrow = jax.lax.dynamic_slice(lf, (dy, nd - 1),
+                                         (TILE_ROWS, w_out + bw - 1))
+            rrow = jax.lax.dynamic_slice(rf, (dy, d),
+                                         (TILE_ROWS, w_out + bw - 1))
+            diff = jnp.abs(lrow - rrow)
+            for dx in range(bw):
+                acc = acc + jax.lax.dynamic_slice(diff, (0, dx),
+                                                  (TILE_ROWS, w_out))
+        take = acc < best
+        best = jnp.where(take, acc, best)
+        best_d = jnp.where(take, d, best_d)
+    o_ref[...] = best_d
+
+
+@functools.partial(jax.jit, static_argnames=("nd", "bh", "bw", "w_out",
+                                             "interpret"))
+def sad_strips(l, r, *, nd, bh, bw, w_out, interpret: bool = True):
+    hp, wp = l.shape
+    h = hp - TILE_ROWS
+    assert h % TILE_ROWS == 0
+    grid = (h // TILE_ROWS,)
+    strip = lambda off: pl.BlockSpec((TILE_ROWS, wp),
+                                     lambda i, off=off: (i + off, 0))
+    return pl.pallas_call(
+        functools.partial(_sad_kernel, nd=nd, bh=bh, bw=bw, w_out=w_out),
+        grid=grid,
+        in_specs=[strip(0), strip(1), strip(0), strip(1)],
+        out_specs=pl.BlockSpec((TILE_ROWS, w_out), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((h, w_out), jnp.int32),
+        interpret=interpret,
+    )(l, l, r, r)

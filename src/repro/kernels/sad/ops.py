@@ -1,0 +1,27 @@
+"""Public wrapper for the SAD disparity kernel."""
+from __future__ import annotations
+
+import os
+
+import jax.numpy as jnp
+
+from .kernel import TILE_ROWS, sad_strips
+
+INTERPRET = os.environ.get("REPRO_PALLAS_REAL", "0") != "1"
+
+
+def sad_disparity(l, r, *, nd: int = 64, bh: int = 8, bw: int = 8):
+    """Best-match disparity per pixel (see ref.py contract)."""
+    l = jnp.asarray(l, jnp.int32)
+    r = jnp.asarray(r, jnp.int32)
+    h = l.shape[0] - bh + 1
+    w = l.shape[1] - bw + 1 - (nd - 1)
+    h_pad = (-h) % TILE_ROWS
+    rows_needed = h + h_pad + TILE_ROWS
+    extra = rows_needed - l.shape[0]
+    if extra > 0:
+        l = jnp.pad(l, ((0, extra), (0, 0)))
+        r = jnp.pad(r, ((0, extra), (0, 0)))
+    out = sad_strips(l, r, nd=nd, bh=bh, bw=bw, w_out=w,
+                     interpret=INTERPRET)
+    return out[:h]

@@ -1,0 +1,32 @@
+"""Pure-jnp oracle for the SAD block-matching kernel (STEREO).
+
+Contract: inputs are zero-extended so every window/disparity read is in
+range. For output pixel (y, x):
+    sad[d] = sum_{dy<bh, dx<bw} |L[y+dy, x+dx+nd-1] - R[y+dy, x+dx+d]|
+    out[y, x] = argmin_d sad[d]      (first minimum wins)
+with L, R of shape (H + bh - 1, W + bw - 1 + nd - 1) int32, out (H, W).
+The left image is read at horizontal offset nd-1 (disparity 0 aligns with
+d = nd-1; d < nd-1 looks left by (nd-1-d)).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def sad_ref(l: jnp.ndarray, r: jnp.ndarray, *, nd: int, bh: int, bw: int
+            ) -> jnp.ndarray:
+    h = l.shape[0] - bh + 1
+    w = l.shape[1] - bw + 1 - (nd - 1)
+    best = jnp.full((h, w), jnp.iinfo(jnp.int32).max, jnp.int32)
+    best_d = jnp.zeros((h, w), jnp.int32)
+    for d in range(nd):
+        acc = jnp.zeros((h, w), jnp.int32)
+        for dy in range(bh):
+            for dx in range(bw):
+                lw = l[dy:dy + h, nd - 1 + dx:nd - 1 + dx + w]
+                rw = r[dy:dy + h, d + dx:d + dx + w]
+                acc = acc + jnp.abs(lw - rw)
+        take = acc < best
+        best = jnp.where(take, acc, best)
+        best_d = jnp.where(take, d, best_d)
+    return best_d

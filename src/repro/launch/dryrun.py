@@ -1,0 +1,257 @@
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell with
+512 placeholder host devices, and record the roofline terms.
+
+  PYTHONPATH=src python -m repro.launch.dryrun --arch gemma-2b \
+      --shape train_4k [--multipod] [--out artifacts/]
+
+Writes one JSON artifact per cell with memory analysis, cost analysis,
+collective bytes (parsed from optimized HLO), the sharding-mapper decision
+log, and the derived roofline terms.
+"""
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+
+import argparse
+import json
+import math
+import time
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCHS, LONG_CONTEXT_ARCHS, SHAPES
+from repro.launch.mesh import (HBM_BW, ICI_BW, PEAK_FLOPS_BF16,
+                               make_production_mesh)
+from repro.models.config import ModelConfig
+from repro.models.model import abstract_params, param_specs, cache_specs
+from repro.optim.adamw import AdamWState
+from repro.parallel.mapper import (ShardingMapper, choose_rules,
+                                   spec_shardings)
+from repro.train.steps import StepOptions, build_train_step, \
+    build_serve_steps, input_specs
+from jax.sharding import NamedSharding, PartitionSpec
+
+
+def batch_shardings(mapper: ShardingMapper, batch_spec):
+    def leaf(s):
+        if s.shape and s.shape[0] == 3 and len(s.shape) == 3:  # mrope pos
+            return NamedSharding(
+                mapper.mesh,
+                PartitionSpec(None, *mapper.resolve(
+                    s.shape[1:], ("act_batch", None))))
+        axes = ["act_batch"] + [None] * (len(s.shape) - 1)
+        return mapper.named(s.shape, tuple(axes))
+    return jax.tree.map(leaf, batch_spec)
+
+
+def opt_abstract(params_abs):
+    f32 = lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32)
+    return AdamWState(jax.ShapeDtypeStruct((), jnp.int32),
+                      jax.tree.map(f32, params_abs),
+                      jax.tree.map(f32, params_abs))
+
+
+def opt_shardings(mapper, param_sh):
+    rep = NamedSharding(mapper.mesh, PartitionSpec())
+    return AdamWState(rep, jax.tree.map(lambda s: s, param_sh),
+                      jax.tree.map(lambda s: s, param_sh))
+
+
+def _compile_once(cfg: ModelConfig, shape_name: str, mesh, opts: StepOptions):
+    """Lower + compile one cell; returns (cost metrics, memory, mapper, t)."""
+    seq, batch, kind = SHAPES[shape_name]
+    rules, notes = choose_rules(cfg, mesh)
+    mapper = ShardingMapper(mesh, rules)
+    mapper.decisions.extend(notes)
+
+    params_abs = abstract_params(cfg)
+    param_sh = spec_shardings(mapper, param_specs(cfg))
+    specs = input_specs(cfg, shape_name, seq, batch, kind)
+    batch_sh = batch_shardings(mapper, specs["batch"])
+
+    t0 = time.time()
+    with mesh:
+        if kind == "train":
+            step = build_train_step(cfg, shard=mapper.shard, opts=opts,
+                                    mesh=mesh)
+            opt_abs = opt_abstract(params_abs)
+            opt_sh = opt_shardings(mapper, param_sh)
+            fn = jax.jit(step,
+                         in_shardings=(param_sh, opt_sh, batch_sh),
+                         out_shardings=(param_sh, opt_sh, None),
+                         donate_argnums=(0, 1))
+            lowered = fn.lower(params_abs, opt_abs, specs["batch"])
+        elif kind == "prefill":
+            prefill_fn, _ = build_serve_steps(cfg, shard=mapper.shard,
+                                              mesh=mesh)
+            fn = jax.jit(prefill_fn, in_shardings=(param_sh, batch_sh))
+            lowered = fn.lower(params_abs, specs["batch"])
+        else:  # decode
+            _, decode_fn = build_serve_steps(cfg, shard=mapper.shard,
+                                             mesh=mesh)
+            cache_sh = spec_shardings(mapper, cache_specs(cfg, batch, seq))
+            fn = jax.jit(decode_fn,
+                         in_shardings=(param_sh, cache_sh, batch_sh),
+                         out_shardings=(None, cache_sh),
+                         donate_argnums=(1,))
+            lowered = fn.lower(params_abs, specs["cache"], specs["batch"])
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    cost = compiled.cost_analysis() or {}
+    mem = compiled.memory_analysis()
+    mem_d: Dict[str, Any] = {}
+    for k in ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "generated_code_size_in_bytes",
+              "alias_size_in_bytes"):
+        mem_d[k] = getattr(mem, k, None)
+    from repro.parallel.hlo import collective_bytes
+    coll = collective_bytes(compiled.as_text())
+    metrics = {
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes": float(cost.get("bytes accessed", 0.0)),
+        "coll_total": float(coll.get("total", 0)),
+        "coll": {k: float(v) for k, v in coll.items()},
+    }
+    return metrics, mem_d, mapper, t_lower, t_compile
+
+
+def lower_cell(cfg: ModelConfig, shape_name: str, multi_pod: bool,
+               opts: StepOptions = StepOptions(),
+               cfg_overrides: Dict[str, Any] = None) -> Dict[str, Any]:
+    """Full-cell dry-run with scan-trip-count cost correction.
+
+    XLA's cost_analysis counts a while-loop body ONCE, so layer-scan costs
+    must be extrapolated: compile at 1 and 2 scan periods (cost is affine in
+    the trip count: total = fixed + n_per * body), and compile the full
+    depth for the memory-fit proof.
+    """
+    seq, batch, kind = SHAPES[shape_name]
+    if cfg_overrides:
+        cfg = cfg.replace(**cfg_overrides)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = int(np.prod(mesh.devices.shape))
+
+    per = cfg.period
+    n_per = cfg.n_layers // per
+    tail = cfg.n_layers % per
+
+    # full-depth compile: memory analysis + sharding decisions
+    full_m, mem_d, mapper, t_lo, t_co = _compile_once(cfg, shape_name, mesh,
+                                                      opts)
+    if n_per >= 2:
+        cfg1 = cfg.replace(n_layers=per + tail, unroll_scans=True)
+        cfg2 = cfg.replace(n_layers=2 * per + tail, unroll_scans=True)
+        m1, _, _, _, _ = _compile_once(cfg1, shape_name, mesh, opts)
+        m2, _, _, _, _ = _compile_once(cfg2, shape_name, mesh, opts)
+        metrics = {}
+        for k in ("flops", "bytes", "coll_total"):
+            body = m2[k] - m1[k]
+            metrics[k] = m1[k] + (n_per - 1) * body
+        coll = {k: m1["coll"].get(k, 0.0)
+                + (n_per - 1) * (m2["coll"].get(k, 0.0)
+                                 - m1["coll"].get(k, 0.0))
+                for k in set(m1["coll"]) | set(m2["coll"])}
+        extrap = {"mode": "affine", "n_per": n_per,
+                  "flops_1p": m1["flops"], "flops_2p": m2["flops"],
+                  "flops_raw_full": full_m["flops"]}
+    else:
+        mu, _, _, _, _ = _compile_once(cfg.replace(unroll_scans=True),
+                                       shape_name, mesh, opts)
+        metrics = {k: mu[k] for k in ("flops", "bytes", "coll_total")}
+        coll = mu["coll"]
+        extrap = {"mode": "direct-unrolled"}
+
+    flops = metrics["flops"]
+    bytes_acc = metrics["bytes"]
+    coll_b = metrics["coll_total"]
+    t_lower, t_compile = t_lo, t_co
+
+    compute_s = flops / PEAK_FLOPS_BF16
+    memory_s = bytes_acc / HBM_BW
+    collective_s = coll_b / ICI_BW
+    dominant = max(("compute", compute_s), ("memory", memory_s),
+                   ("collective", collective_s), key=lambda kv: kv[1])[0]
+    model_flops = 6 * cfg.param_count(active_only=True) * batch * (
+        seq if kind != "decode" else 1)
+    if kind != "train":
+        model_flops //= 3  # forward only
+
+    art = {
+        "arch": cfg.name, "shape": shape_name, "kind": kind,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "n_chips": n_chips, "seq": seq, "batch": batch,
+        "t_lower_s": round(t_lower, 1), "t_compile_s": round(t_compile, 1),
+        "flops_per_device": flops, "bytes_per_device": bytes_acc,
+        "collective_bytes_per_device": coll_b,
+        "collectives": coll,
+        "compute_s": compute_s, "memory_s": memory_s,
+        "collective_s": collective_s, "dominant": dominant,
+        "model_flops_global": float(model_flops),
+        "useful_flops_ratio": (float(model_flops) / (flops * n_chips)
+                               if flops else None),
+        "memory_analysis": mem_d,
+        # CPU-backend proxy: args+temp vs the 16 GB v5e HBM. temp is
+        # PESSIMISTIC on this backend (unfused f32 score/mask buffers that
+        # the Pallas flash path keeps in VMEM on real TPU) — see
+        # EXPERIMENTS.md §Dry-run.
+        "hbm_gb": round(((mem_d.get("argument_size_in_bytes") or 0)
+                         + (mem_d.get("temp_size_in_bytes") or 0)) / 1e9, 2),
+        "fits_hbm_16g": ((mem_d.get("argument_size_in_bytes") or 0)
+                         + (mem_d.get("temp_size_in_bytes") or 0)) <= 16e9,
+        "mapper_decisions": mapper.decisions,
+        "params_global": cfg.param_count(),
+        "params_active": cfg.param_count(active_only=True),
+        "extrapolation": extrap,
+    }
+    return art
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=sorted(ARCHS))
+    ap.add_argument("--shape", required=True, choices=sorted(SHAPES))
+    ap.add_argument("--multipod", action="store_true")
+    ap.add_argument("--out", default="artifacts")
+    ap.add_argument("--tag", default="baseline")
+    ap.add_argument("--microbatch", type=int, default=1)
+    ap.add_argument("--grad-compress", action="store_true")
+    ap.add_argument("--override", action="append", default=[],
+                    help="cfg override key=value (e.g. remat=False)")
+    args = ap.parse_args()
+
+    cfg = ARCHS[args.arch]
+    if args.shape == "long_500k" and args.arch not in LONG_CONTEXT_ARCHS:
+        print(f"SKIP {args.arch} x long_500k (full attention; DESIGN.md §4)")
+        return
+
+    overrides: Dict[str, Any] = {}
+    for ov in args.override:
+        k, v = ov.split("=", 1)
+        overrides[k] = json.loads(v) if v not in ("True", "False") \
+            else (v == "True")
+
+    opts = StepOptions(microbatch=args.microbatch,
+                       grad_compress_int8=args.grad_compress)
+    art = lower_cell(cfg, args.shape, args.multipod, opts,
+                     overrides or None)
+    art["tag"] = args.tag
+    os.makedirs(args.out, exist_ok=True)
+    mesh_tag = "multipod" if args.multipod else "pod"
+    path = os.path.join(
+        args.out, f"{args.arch}__{args.shape}__{mesh_tag}__{args.tag}.json")
+    with open(path, "w") as f:
+        json.dump(art, f, indent=1)
+    print(f"OK {args.arch} x {args.shape} x {mesh_tag}: "
+          f"compute={art['compute_s']:.3e}s memory={art['memory_s']:.3e}s "
+          f"collective={art['collective_s']:.3e}s dominant={art['dominant']} "
+          f"(lower {art['t_lower_s']}s compile {art['t_compile_s']}s)")
+    print(f"   -> {path}")
+
+
+if __name__ == "__main__":
+    main()

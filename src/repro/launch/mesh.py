@@ -1,0 +1,23 @@
+"""Production mesh construction.
+
+A function, not a module-level constant: importing this module never touches
+jax device state. Single pod = 256 chips as (data=16, model=16); multi-pod =
+2 pods x 256 chips as (pod=2, data=16, model=16). The 'pod' axis carries the
+slow (DCN/inter-pod) hop: only data parallelism (and optionally the decode
+cache sequence) is mapped onto it.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+# TPU v5e hardware constants for the roofline (per chip)
+PEAK_FLOPS_BF16 = 197e12          # FLOP/s
+HBM_BW = 819e9                    # bytes/s
+ICI_BW = 50e9                     # bytes/s per link

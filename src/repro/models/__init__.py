@@ -1,0 +1,6 @@
+"""Model zoo substrate: composable decoder blocks (attention / MLA / MoE /
+Mamba2-SSD), periodic heterogeneous stacks, and the LM forward/loss/decode
+entry points."""
+from .config import ModelConfig  # noqa: F401
+from .model import (abstract_params, build_forward, init_params,  # noqa
+                    param_specs)

@@ -1,0 +1,642 @@
+"""Model layers: norms, RoPE / M-RoPE, blocked-flash attention (prefill),
+decode attention over a KV cache, MLA (DeepSeek-V2), dropping MoE with
+expert parallelism, and the Mamba2 SSD mixer.
+
+All functions are pure; parameters are plain dicts of jnp arrays. Activation
+sharding hints are injected by the caller via the `shard` callback (the
+meets-or-exceeds sharding mapper in repro.parallel).
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+Shard = Callable[[jnp.ndarray, Tuple[Optional[str], ...]], jnp.ndarray]
+
+
+def _noshard(x, axes):
+    return x
+
+
+def maybe_scan(f, init, xs, *, unroll: bool, length: Optional[int] = None):
+    """lax.scan, or a Python unroll when `unroll` (cost-compile mode: XLA
+    cost_analysis counts while bodies once, so true totals need unrolling)."""
+    if not unroll:
+        return lax.scan(f, init, xs)
+    n = length if length is not None else jax.tree.leaves(xs)[0].shape[0]
+    carry, ys = init, []
+    for i in range(n):
+        x_i = jax.tree.map(lambda a: a[i], xs)
+        carry, y = f(carry, x_i)
+        ys.append(y)
+    if ys and ys[0] is not None:
+        ys = jax.tree.map(lambda *a: jnp.stack(a), *ys)
+    else:
+        ys = None
+    return carry, ys
+
+
+# --------------------------------------------------------------------------
+# norms
+
+
+def rms_norm(x, scale, eps=1e-6):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
+
+
+def layer_norm(x, scale, eps=1e-6):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
+
+
+def norm(x, scale, cfg):
+    f = layer_norm if cfg.use_layernorm else rms_norm
+    return f(x, scale, cfg.norm_eps)
+
+
+def norm_dist(x, scale, cfg, mesh, axis: str = "model"):
+    """Distributed norm over a model-sharded feature axis: statistics via
+    psum of per-shard partial sums (bytes: O(B*S) scalars instead of the
+    partitioner's f32 full-residual all-gather)."""
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    D = x.shape[-1]
+    bspec = ("pod", "data") if "pod" in mesh.axis_names else "data"
+    use_ln = cfg.use_layernorm
+    eps = cfg.norm_eps
+
+    def local(xl, sl):
+        xf = xl.astype(jnp.float32)
+        if use_ln:
+            mu = lax.psum(xf.sum(-1, keepdims=True), axis) / D
+            var = lax.psum(jnp.square(xf - mu).sum(-1, keepdims=True),
+                           axis) / D
+            y = (xf - mu) * lax.rsqrt(var + eps)
+        else:
+            var = lax.psum(jnp.square(xf).sum(-1, keepdims=True), axis) / D
+            y = xf * lax.rsqrt(var + eps)
+        return (y * (1.0 + sl.astype(jnp.float32))).astype(xl.dtype)
+
+    fn = shard_map(local, mesh=mesh,
+                   in_specs=(P(bspec, None, axis), P(axis)),
+                   out_specs=P(bspec, None, axis), check_rep=False)
+    return fn(x, scale)
+
+
+# --------------------------------------------------------------------------
+# RoPE
+
+
+def rope_freqs(dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+
+
+def apply_rope(x, positions, theta: float,
+               mrope_sections: Optional[Tuple[int, int, int]] = None):
+    """x: (B, S, H, D). positions: (B, S) or (3, B, S) for M-RoPE."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                       # (d/2,)
+    if mrope_sections is None:
+        ang = positions[..., None].astype(jnp.float32) * freqs  # (B,S,d/2)
+    else:
+        # Qwen2-VL M-RoPE: the d/2 frequency slots are split into
+        # (temporal, height, width) sections, each driven by its own
+        # position stream.
+        secs = mrope_sections
+        assert sum(secs) == d // 2, (secs, d)
+        parts = []
+        off = 0
+        for i, s in enumerate(secs):
+            f = freqs[off:off + s]
+            parts.append(positions[i][..., None].astype(jnp.float32) * f)
+            off += s
+        ang = jnp.concatenate(parts, axis=-1)          # (B,S,d/2)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# blocked-flash attention (pure JAX, scan over KV blocks) — the XLA path
+# used for dry-runs; the Pallas kernel in repro.kernels is the TPU path.
+
+
+def blocked_attention(q, k, v, *, causal: bool,
+                      window: Optional[int] = None,
+                      block_kv: int = 1024,
+                      q_offset: int = 0,
+                      unroll: bool = False) -> jnp.ndarray:
+    """q: (B,Sq,H,D), k/v: (B,Skv,Hkv,Dk/Dv). Online-softmax over KV blocks
+    keeps peak memory at O(Sq * block_kv) instead of O(Sq * Skv)."""
+    B, Sq, H, D = q.shape
+    _, Skv, Hkv, Dv = v.shape
+    G = H // Hkv
+    scale = 1.0 / math.sqrt(q.shape[-1])
+    nkv = max(1, math.ceil(Skv / block_kv))
+    pad = nkv * block_kv - Skv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kb = k.reshape(B, nkv, block_kv, Hkv, k.shape[-1])
+    vb = v.reshape(B, nkv, block_kv, Hkv, Dv)
+    qg = q.reshape(B, Sq, Hkv, G, D)
+    q_pos = q_offset + jnp.arange(Sq)
+
+    def step(carry, inputs):
+        m, l, acc = carry
+        kblk, vblk, blk_i = inputs
+        k_pos = blk_i * block_kv + jnp.arange(block_kv)
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, kblk,
+                       preferred_element_type=jnp.float32) * scale
+        # 2-D additive mask (broadcast in the add): avoids materializing a
+        # 5-D pred tensor per block, which the CPU backend will not fuse
+        mask = k_pos[None, :] <= (q_pos[:, None] if causal
+                                  else jnp.full((Sq, 1), Skv + q_offset))
+        mask = mask & (k_pos[None, :] < Skv)
+        if window is not None:
+            mask = mask & (k_pos[None, :] > q_pos[:, None] - window)
+        madd = jnp.where(mask, 0.0, -1e30).astype(jnp.float32)
+        s = s + madd[None, None, None]
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=-1)
+        pv = jnp.einsum("bhgqk,bkhd->bhgqd", p.astype(vblk.dtype), vblk,
+                        preferred_element_type=jnp.float32)
+        acc_new = acc * corr[..., None] + pv
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, Hkv, G, Sq), -1e30, jnp.float32)
+    l0 = jnp.zeros((B, Hkv, G, Sq), jnp.float32)
+    a0 = jnp.zeros((B, Hkv, G, Sq, Dv), jnp.float32)
+    kb_t = jnp.moveaxis(kb, 1, 0)
+    vb_t = jnp.moveaxis(vb, 1, 0)
+    (m, l, acc), _ = maybe_scan(step, (m0, l0, a0),
+                                (kb_t, vb_t, jnp.arange(nkv)),
+                                unroll=unroll)
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    out = jnp.moveaxis(out, 3, 1).reshape(B, Sq, H, Dv)
+    lse = m + jnp.log(jnp.maximum(l, 1e-30))          # (B,Hkv,G,Sq)
+    return out.astype(q.dtype), lse
+
+
+# flash attention with a block-recompute backward (custom_vjp): residuals
+# are O(S*D) (q,k,v,out,lse) instead of O(S^2) softmax matrices — this is
+# what makes the 4k/32k training/prefill memory fit per device.
+
+@partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def flash_attention(q, k, v, causal: bool, window, block_kv: int,
+                    unroll: bool):
+    out, _ = blocked_attention(q, k, v, causal=causal, window=window,
+                               block_kv=block_kv, unroll=unroll)
+    return out
+
+
+def _flash_fwd(q, k, v, causal, window, block_kv, unroll):
+    out, lse = blocked_attention(q, k, v, causal=causal, window=window,
+                                 block_kv=block_kv, unroll=unroll)
+    return out, (q, k, v, out, lse)
+
+
+def _flash_bwd(causal, window, block_kv, unroll, res, do):
+    q, k, v, out, lse = res
+    B, Sq, H, D = q.shape
+    _, Skv, Hkv, Dv = v.shape
+    G = H // Hkv
+    scale = 1.0 / math.sqrt(D)
+    nkv = max(1, math.ceil(Skv / block_kv))
+    pad = nkv * block_kv - Skv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kb = jnp.moveaxis(k.reshape(B, nkv, block_kv, Hkv, D), 1, 0)
+    vb = jnp.moveaxis(v.reshape(B, nkv, block_kv, Hkv, Dv), 1, 0)
+    qg = q.reshape(B, Sq, Hkv, G, D)
+    dog = do.reshape(B, Sq, Hkv, G, Dv).astype(jnp.float32)
+    og = out.reshape(B, Sq, Hkv, G, Dv).astype(jnp.float32)
+    dsum = (dog * og).sum(-1).transpose(0, 2, 3, 1)       # (B,Hkv,G,Sq)
+    q_pos = jnp.arange(Sq)
+
+    def step(dq_acc, inputs):
+        kblk, vblk, blk_i = inputs
+        k_pos = blk_i * block_kv + jnp.arange(block_kv)
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, kblk,
+                       preferred_element_type=jnp.float32) * scale
+        mask = k_pos[None, :] <= (q_pos[:, None] if causal
+                                  else jnp.full((Sq, 1), Skv))
+        mask = mask & (k_pos[None, :] < Skv)
+        if window is not None:
+            mask = mask & (k_pos[None, :] > q_pos[:, None] - window)
+        madd = jnp.where(mask, 0.0, -1e30).astype(jnp.float32)
+        s = s + madd[None, None, None]
+        p = jnp.exp(s - lse[..., None])             # (B,Hkv,G,Sq,K)
+        dv_blk = jnp.einsum("bhgqk,bqhgd->bkhd", p, dog)
+        dp = jnp.einsum("bqhgd,bkhd->bhgqk", dog, vblk.astype(jnp.float32))
+        ds = p * (dp - dsum[..., None]) * scale
+        dq_acc = dq_acc + jnp.einsum("bhgqk,bkhd->bqhgd", ds,
+                                     kblk.astype(jnp.float32))
+        dk_blk = jnp.einsum("bhgqk,bqhgd->bkhd", ds, qg.astype(jnp.float32))
+        return dq_acc, (dk_blk, dv_blk)
+
+    dq0 = jnp.zeros((B, Sq, Hkv, G, D), jnp.float32)
+    dq, (dks, dvs) = maybe_scan(step, dq0, (kb, vb, jnp.arange(nkv)),
+                                unroll=unroll)
+    dk = jnp.moveaxis(dks, 0, 1).reshape(B, nkv * block_kv, Hkv, D)[:, :Skv]
+    dv = jnp.moveaxis(dvs, 0, 1).reshape(B, nkv * block_kv, Hkv, Dv)[:, :Skv]
+    return (dq.reshape(B, Sq, H, D).astype(q.dtype), dk.astype(q.dtype),
+            dv.astype(q.dtype))
+
+
+flash_attention.defvjp(_flash_fwd, _flash_bwd)
+
+
+def naive_attention(q, k, v, *, causal, window=None, q_offset=0):
+    """Reference O(S^2)-memory attention for smoke tests / oracles."""
+    B, Sq, H, D = q.shape
+    _, Skv, Hkv, Dv = v.shape
+    G = H // Hkv
+    qg = q.reshape(B, Sq, Hkv, G, D)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k,
+                   preferred_element_type=jnp.float32)
+    s = s / math.sqrt(D)
+    q_pos = q_offset + jnp.arange(Sq)
+    k_pos = jnp.arange(Skv)
+    mask = jnp.ones((Sq, Skv), bool)
+    if causal:
+        mask = mask & (k_pos[None, :] <= q_pos[:, None])
+    if window is not None:
+        mask = mask & (k_pos[None, :] > q_pos[:, None] - window)
+    s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bkhd->bhgqd", p.astype(v.dtype), v,
+                   preferred_element_type=jnp.float32)
+    return jnp.moveaxis(o, 3, 1).reshape(B, Sq, H, Dv).astype(q.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, *, window=None, cur_idx=None):
+    """One-token decode: q (B,1,H,D) against a full cache (B,S,Hkv,D).
+    The softmax over the (possibly sharded) S axis is left to the SPMD
+    partitioner: sharding k/v on S yields flash-decode-style partial
+    softmax + cross-shard combine collectives. ``cur_idx`` masks cache
+    slots beyond the current decode position."""
+    B, _, H, D = q.shape
+    _, S, Hkv, Dv = v_cache.shape
+    G = H // Hkv
+    qg = q.reshape(B, Hkv, G, D)
+    s = jnp.einsum("bhgd,bkhd->bhgk", qg, k_cache,
+                   preferred_element_type=jnp.float32) / math.sqrt(D)
+    k_pos = jnp.arange(S)
+    idx = (S - 1) if cur_idx is None else cur_idx
+    valid = k_pos <= idx
+    if window is not None:
+        valid = valid & (k_pos > idx - window)
+    s = jnp.where(valid[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgk,bkhd->bhgd", p.astype(v_cache.dtype), v_cache,
+                   preferred_element_type=jnp.float32)
+    return o.reshape(B, 1, H, Dv).astype(q.dtype)
+
+
+# --------------------------------------------------------------------------
+# standard attention block (GQA / MQA, optional bias, sliding window)
+
+
+def attention_block(x, p, cfg, *, positions, window, cache=None,
+                    shard: Shard = _noshard):
+    B, S, _ = x.shape
+    H, Hkv, D = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if cfg.qkv_bias:
+        q = q + p["bq"]
+        k = k + p["bk"]
+        v = v + p["bv"]
+    q = shard(q, ("act_batch", "act_seq", "act_heads", None))
+    k = shard(k, ("act_batch", "act_seq", "act_kv", None))
+    mrope = cfg.mrope_sections
+    q = apply_rope(q, positions, cfg.rope_theta, mrope)
+    k = apply_rope(k, positions, cfg.rope_theta, mrope)
+    if cache is None:
+        if cfg.attn_impl == "naive":
+            o = naive_attention(q, k, v, causal=True, window=window)
+        else:
+            o = flash_attention(q, k, v, True, window, cfg.attn_block_kv,
+                                cfg.unroll_scans)
+        new_cache = None
+    else:
+        # in-place cache write at the current decode index (donated buffer;
+        # no full-cache copy per step). Rolling window caches (cache length
+        # == window) wrap the write index; every resident entry is then
+        # within the window by construction, so no window mask is needed.
+        cache_len = cache["k"].shape[1]
+        pos0 = positions.reshape(-1)[0]
+        idx = pos0 % cache_len
+        rolling = window is not None and cache_len <= window
+        kc = lax.dynamic_update_slice_in_dim(cache["k"], k, idx, axis=1)
+        vc = lax.dynamic_update_slice_in_dim(cache["v"], v, idx, axis=1)
+        kc = shard(kc, ("act_batch", "kv_seq", "act_kv", None))
+        vc = shard(vc, ("act_batch", "kv_seq", "act_kv", None))
+        if rolling:
+            # valid = written slots: all once pos0 >= cache_len, else 0..idx
+            eff_idx = jnp.where(pos0 >= cache_len, cache_len - 1, idx)
+            o = decode_attention(q, kc, vc, window=None, cur_idx=eff_idx)
+        else:
+            o = decode_attention(q, kc, vc, window=window, cur_idx=idx)
+        new_cache = {"k": kc, "v": vc}
+    o = shard(o, ("act_batch", "act_seq", "act_heads", None))
+    out = jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+    return out, new_cache
+
+
+def attention_prefill_cache(x, p, cfg, *, positions, shard: Shard = _noshard):
+    """Prefill: returns last-position hidden + the populated KV cache."""
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if cfg.qkv_bias:
+        k = k + p["bk"]
+        v = v + p["bv"]
+    k = apply_rope(k, positions, cfg.rope_theta, cfg.mrope_sections)
+    return {"k": k, "v": v}
+
+
+# --------------------------------------------------------------------------
+# MLA (DeepSeek-V2 §2.1): low-rank KV compression; the cache holds only the
+# latent c_kv (+ the shared rope key), and decode absorbs the up-projections.
+
+
+def mla_block(x, p, cfg, *, positions, cache=None, shard: Shard = _noshard):
+    B, S, _ = x.shape
+    H = cfg.n_heads
+    dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    # queries (optionally through q LoRA)
+    if cfg.q_lora_rank:
+        cq = jnp.einsum("bsd,dr->bsr", x, p["wq_a"])
+        q = jnp.einsum("bsr,rhk->bshk", cq, p["wq_b"])
+    else:
+        q = jnp.einsum("bsd,dhk->bshk", x, p["wq_b"])
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    # latent kv + shared rope key
+    ckv = jnp.einsum("bsd,dr->bsr", x, p["wkv_a"])          # (B,S,rank)
+    k_rope = jnp.einsum("bsd,dk->bsk", x, p["wk_rope"])     # (B,S,dr)
+    k_rope = apply_rope(k_rope[:, :, None, :], positions,
+                        cfg.rope_theta)[:, :, 0]
+
+    if cache is None:
+        k_nope = jnp.einsum("bsr,rhk->bshk", ckv, p["wk_b"])
+        vv = jnp.einsum("bsr,rhk->bshk", ckv, p["wv_b"])
+        k_full = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_rope[:, :, None, :],
+                                      (B, S, H, dr))], axis=-1)
+        q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+        if cfg.attn_impl == "naive":
+            o = naive_attention(q_full, k_full, vv, causal=True)
+        else:
+            o = flash_attention(q_full, k_full, vv, True, None,
+                                cfg.attn_block_kv, cfg.unroll_scans)
+        new_cache = None
+    else:
+        # absorbed decode in latent space: score = (q_nope W_uk) . c_kv
+        idx = positions.reshape(-1)[0] % cache["ckv"].shape[1]
+        ckv_c = shard(lax.dynamic_update_slice_in_dim(
+            cache["ckv"], ckv, idx, axis=1), ("act_batch", "kv_seq", None))
+        kr_c = shard(lax.dynamic_update_slice_in_dim(
+            cache["k_rope"], k_rope, idx, axis=1),
+            ("act_batch", "kv_seq", None))
+        q_abs = jnp.einsum("bshk,rhk->bshr", q_nope, p["wk_b"])
+        s = (jnp.einsum("bshr,btr->bhst", q_abs, ckv_c,
+                        preferred_element_type=jnp.float32)
+             + jnp.einsum("bshk,btk->bhst", q_rope, kr_c,
+                          preferred_element_type=jnp.float32))
+        s = s / math.sqrt(dn + dr)
+        valid = jnp.arange(ckv_c.shape[1]) <= idx
+        s = jnp.where(valid[None, None, None], s, -1e30)
+        w = jax.nn.softmax(s, axis=-1)
+        o_lat = jnp.einsum("bhst,btr->bshr", w.astype(ckv_c.dtype), ckv_c)
+        o = jnp.einsum("bshr,rhk->bshk", o_lat, p["wv_b"])
+        new_cache = {"ckv": ckv_c, "k_rope": kr_c}
+    out = jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+    return out, new_cache
+
+
+# --------------------------------------------------------------------------
+# feed-forward: gated MLP and dropping MoE with expert parallelism
+
+
+def mlp(x, p, cfg, act: Optional[str] = None):
+    a = act or cfg.mlp_act
+    g = jnp.einsum("bsd,df->bsf", x, p["w_gate"])
+    u = jnp.einsum("bsd,df->bsf", x, p["w_up"])
+    g = jax.nn.silu(g) if a == "silu" else jax.nn.gelu(g)
+    return jnp.einsum("bsf,fd->bsd", g * u, p["w_down"])
+
+
+def moe_ffn(x, p, cfg, *, n_experts_padded: int, shard: Shard = _noshard):
+    """Token-dropping MoE (top-k, capacity-bounded) with scatter dispatch.
+
+    Dispatch bookkeeping (one-hot ranks, capacity check) is computed *per
+    batch row*, so the cumsum runs over the unsharded sequence axis and
+    needs no collectives; the real exchange is the scatter from the
+    token-sharded layout (batch -> data) into the expert-sharded buffer
+    (expert -> model), which the SPMD partitioner lowers to the
+    all-to-all-style expert exchange. Capacity is per row:
+    C = ceil(S * K / E * capacity_factor), Switch-style grouped dispatch.
+    """
+    B, S, Dm = x.shape
+    E, K = n_experts_padded, cfg.moe_top_k
+    C = max(1, int(math.ceil(S * K / E * cfg.moe_capacity_factor)))
+    logits = jnp.einsum("bsd,de->bse", x, p["router"]).astype(jnp.float32)
+    gates = jax.nn.softmax(logits, axis=-1)
+    top_g, top_i = lax.top_k(gates, K)                    # (B,S,K)
+    top_g = top_g / jnp.maximum(top_g.sum(-1, keepdims=True), 1e-9)
+
+    flat_e = top_i.reshape(B, S * K)                      # (B, S*K)
+    oh = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)       # (B, S*K, E)
+    pos = jnp.cumsum(oh, axis=1) - oh                     # rank within expert
+    pos = (pos * oh).sum(-1)                              # (B, S*K)
+    keep = (pos < C).astype(x.dtype)
+    slot = jnp.clip(pos, 0, C - 1)
+
+    x_rep = jnp.repeat(x, K, axis=1) * keep[..., None]    # (B, S*K, D)
+    bidx = jnp.arange(B)[:, None]
+    buf = jnp.zeros((B, E, C, Dm), x.dtype)
+    buf = buf.at[bidx, flat_e, slot].add(x_rep)
+    buf = shard(buf, ("act_batch", "expert", None, None))
+
+    g = jnp.einsum("becd,edf->becf", buf, p["w_gate"])
+    u = jnp.einsum("becd,edf->becf", buf, p["w_up"])
+    g = jax.nn.silu(g) if cfg.mlp_act == "silu" else jax.nn.gelu(g)
+    y = jnp.einsum("becf,efd->becd", g * u, p["w_down"])
+    y = shard(y, ("act_batch", "expert", None, None))
+
+    out_tok = y[bidx, flat_e, slot] * keep[..., None]     # (B, S*K, D)
+    out = (out_tok.reshape(B, S, K, Dm)
+           * top_g.astype(x.dtype)[..., None]).sum(axis=2)
+    if cfg.moe_shared_ff:
+        out = out + mlp(x, p["shared"], cfg)
+    return out
+
+
+# --------------------------------------------------------------------------
+# Mamba2 SSD (state-space duality, chunked matmul form)
+
+
+def ssd_chunked(xh, a_log, Bm, Cm, chunk: int):
+    """Chunked SSD scan.
+
+    xh:    (b, S, H, P)   discretized input (x * dt)
+    a_log: (b, S, H)      per-step log decay (A * dt, negative)
+    Bm,Cm: (b, S, G, N)   input/output projections (G groups, broadcast to H)
+    Returns y (b, S, H, P).
+    """
+    b, S, H, P = xh.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    nc = S // chunk
+    xc = xh.reshape(b, nc, chunk, H, P)
+    ac = a_log.reshape(b, nc, chunk, H)
+    Bc = Bm.reshape(b, nc, chunk, G, N)
+    Cc = Cm.reshape(b, nc, chunk, G, N)
+    rep = H // G
+    Bh = jnp.repeat(Bc, rep, axis=3)                     # (b,nc,l,H,N)
+    Ch = jnp.repeat(Cc, rep, axis=3)
+
+    cum = jnp.cumsum(ac, axis=2)                         # (b,nc,l,H)
+    # intra-chunk: L[i,j] = exp(cum_i - cum_j) for i >= j
+    li = cum[:, :, :, None, :]                           # (b,nc,i,1,H)
+    lj = cum[:, :, None, :, :]                           # (b,nc,1,j,H)
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+    L = jnp.where(mask[None, None, :, :, None],
+                  jnp.exp(li - lj), 0.0)                 # (b,nc,i,j,H)
+    scores = jnp.einsum("bcihn,bcjhn->bcijh", Ch, Bh,
+                        preferred_element_type=jnp.float32) * L
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", scores.astype(xh.dtype), xc)
+
+    # chunk states: S_c = sum_j exp(cum_last - cum_j) B_j x_j^T
+    decay_tail = jnp.exp(cum[:, :, -1:, :] - cum)        # (b,nc,l,H)
+    states = jnp.einsum("bclhn,bclh,bclhp->bchnp",
+                        Bh, decay_tail.astype(xh.dtype), xc)
+    chunk_decay = jnp.exp(cum[:, :, -1, :])              # (b,nc,H) total decay
+
+    def scan_fn(carry, inp):
+        st_in, (state_c, dec_c) = carry, inp
+        out = st_in
+        st_new = st_in * dec_c[:, :, None, None].astype(st_in.dtype) + state_c
+        return st_new, out
+
+    init = jnp.zeros((b, H, N, P), xh.dtype)
+    _, prev_states = lax.scan(
+        scan_fn, init,
+        (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    prev_states = jnp.moveaxis(prev_states, 0, 1)        # (b,nc,H,N,P)
+
+    inter_decay = jnp.exp(cum)                           # (b,nc,l,H)
+    y_inter = jnp.einsum("bclhn,bclh,bchnp->bclhp",
+                         Ch, inter_decay.astype(xh.dtype), prev_states)
+    y = (y_intra + y_inter).reshape(b, S, H, P)
+    return y
+
+
+def ssd_reference(xh, a_log, Bm, Cm):
+    """Naive per-step recurrence oracle for tests: state_{t} =
+    exp(a_t) state_{t-1} + B_t x_t^T ; y_t = C_t . state_t."""
+    b, S, H, P = xh.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    rep = H // G
+    Bh = jnp.repeat(Bm, rep, axis=2)
+    Ch = jnp.repeat(Cm, rep, axis=2)
+
+    def step(state, inp):
+        x_t, a_t, b_t, c_t = inp
+        state = state * jnp.exp(a_t)[:, :, None, None] \
+            + jnp.einsum("bhn,bhp->bhnp", b_t, x_t)
+        y_t = jnp.einsum("bhn,bhnp->bhp", c_t, state)
+        return state, y_t
+
+    init = jnp.zeros((b, H, N, P), jnp.float32)
+    xs = (jnp.moveaxis(xh.astype(jnp.float32), 1, 0),
+          jnp.moveaxis(a_log.astype(jnp.float32), 1, 0),
+          jnp.moveaxis(Bh.astype(jnp.float32), 1, 0),
+          jnp.moveaxis(Ch.astype(jnp.float32), 1, 0))
+    _, ys = lax.scan(step, init, xs)
+    return jnp.moveaxis(ys, 0, 1)
+
+
+def causal_conv1d(x, w, cache=None):
+    """Depthwise causal conv. x: (B,S,C), w: (K,C). Returns (y, new_cache)
+    where cache holds the last K-1 inputs for decode."""
+    K = w.shape[0]
+    if cache is None:
+        xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+        new_cache = None
+    else:
+        xp = jnp.concatenate([cache, x], axis=1)
+        new_cache = xp[:, -(K - 1):]
+    y = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(K))
+    return y, new_cache
+
+
+def mamba_block(x, p, cfg, *, cache=None, shard: Shard = _noshard):
+    """Mamba2 block: in_proj -> conv -> SSD -> gate -> out_proj.
+
+    cache (decode): {"conv": (B,K-1,conv_ch), "state": (B,H,N,P)}.
+    """
+    B, S, Dm = x.shape
+    di, N, Pd = cfg.d_inner, cfg.ssm_state, cfg.ssm_head_dim
+    H = cfg.ssm_heads
+    G = 1
+    zxbcdt = jnp.einsum("bsd,de->bse", x, p["w_in"])
+    z, xbc, dt = jnp.split(zxbcdt, [di, 2 * di + 2 * G * N], axis=-1)
+    conv_cache = cache["conv"] if cache else None
+    xbc, new_conv = causal_conv1d(xbc, p["conv_w"], conv_cache)
+    xbc = jax.nn.silu(xbc)
+    xs, Bm, Cm = jnp.split(xbc, [di, di + G * N], axis=-1)
+    xs = xs.reshape(B, S, H, Pd)
+    Bm = Bm.reshape(B, S, G, N)
+    Cm = Cm.reshape(B, S, G, N)
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))  # (B,S,H)
+    A = -jnp.exp(p["a_log"].astype(jnp.float32))              # (H,)
+    a_log = (dt * A)                                          # (B,S,H)
+    xh = xs * dt.astype(xs.dtype)[..., None]
+
+    if cache is None:
+        chunk = min(cfg.ssm_chunk, S)
+        pad = (-S) % chunk
+        if pad:
+            # zero-pad the tail: causal scan means real positions are
+            # unaffected (padded a_log=0 -> decay 1, padded x=0 -> no input)
+            xh_p = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            a_p = jnp.pad(a_log, ((0, 0), (0, pad), (0, 0)))
+            B_p = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            C_p = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            y = ssd_chunked(xh_p, a_p, B_p, C_p, chunk)[:, :S]
+        else:
+            y = ssd_chunked(xh, a_log, Bm, Cm, chunk)
+        new_state = None
+    else:
+        st = cache["state"]
+        dec = jnp.exp(a_log[:, 0])                            # (B,H)
+        st = st * dec[:, :, None, None].astype(st.dtype) + jnp.einsum(
+            "bgn,bhp->bhnp", Bm[:, 0], xh[:, 0])
+        y = jnp.einsum("bgn,bhnp->bhp", Cm[:, 0], st)[:, None]
+        new_state = st
+    y = y.reshape(B, S, di) + xs.reshape(B, S, di) * p["d_skip"]
+    y = (y * jax.nn.silu(z)).astype(x.dtype)
+    out = jnp.einsum("bse,ed->bsd", y, p["w_out"]).astype(x.dtype)
+    new_cache = None if cache is None else {"conv": new_conv,
+                                            "state": new_state}
+    return out, new_cache

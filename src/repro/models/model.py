@@ -1,0 +1,473 @@
+"""Model assembly: parameter specs, periodic layer stacking (scan over
+repeating periods + unrolled tail), train/prefill/decode forwards, and
+memory-bounded chunked cross-entropy.
+
+Parameters are described by a spec tree of `P` leaves (shape, logical axes,
+init); the same tree produces ShapeDtypeStructs for dry-runs, real arrays for
+smoke tests, and NamedShardings through the meets-or-exceeds mapper.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from . import layers as L
+from .config import ModelConfig
+
+
+@dataclass(frozen=True)
+class P:
+    """One parameter leaf: shape + logical sharding axes + init."""
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]
+    dtype: str = "bfloat16"
+    init: str = "normal"           # normal | zeros | ones | a_log | conv
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def _dt(cfg):
+    return cfg.dtype
+
+
+# --------------------------------------------------------------------------
+# per-slot specs
+
+
+def _attn_specs(cfg: ModelConfig) -> Dict[str, P]:
+    D, H, Hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    dt = _dt(cfg)
+    s = {
+        "wq": P((D, H, hd), ("embed", "heads", None), dt),
+        "wk": P((D, Hkv, hd), ("embed", "kv_heads", None), dt),
+        "wv": P((D, Hkv, hd), ("embed", "kv_heads", None), dt),
+        "wo": P((H, hd, D), ("heads", None, "embed"), dt),
+    }
+    if cfg.qkv_bias:
+        s["bq"] = P((H, hd), ("heads", None), dt, "zeros")
+        s["bk"] = P((Hkv, hd), ("kv_heads", None), dt, "zeros")
+        s["bv"] = P((Hkv, hd), ("kv_heads", None), dt, "zeros")
+    return s
+
+
+def _mla_specs(cfg: ModelConfig) -> Dict[str, P]:
+    D, H = cfg.d_model, cfg.n_heads
+    dn, dr, dv, rank = (cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim,
+                        cfg.kv_lora_rank)
+    dt = _dt(cfg)
+    s: Dict[str, P] = {
+        "wkv_a": P((D, rank), ("embed", None), dt),
+        "wk_rope": P((D, dr), ("embed", None), dt),
+        "wk_b": P((rank, H, dn), (None, "heads", None), dt),
+        "wv_b": P((rank, H, dv), (None, "heads", None), dt),
+        "wo": P((H, dv, D), ("heads", None, "embed"), dt),
+    }
+    if cfg.q_lora_rank:
+        s["wq_a"] = P((D, cfg.q_lora_rank), ("embed", None), dt)
+        s["wq_b"] = P((cfg.q_lora_rank, H, dn + dr), (None, "heads", None), dt)
+    else:
+        s["wq_b"] = P((D, H, dn + dr), ("embed", "heads", None), dt)
+    return s
+
+
+def _mamba_specs(cfg: ModelConfig) -> Dict[str, P]:
+    D, di, N, H, K = (cfg.d_model, cfg.d_inner, cfg.ssm_state,
+                      cfg.ssm_heads, cfg.ssm_conv)
+    G = 1
+    dt = _dt(cfg)
+    conv_ch = di + 2 * G * N
+    return {
+        "w_in": P((D, 2 * di + 2 * G * N + H), ("embed", "inner"), dt),
+        "conv_w": P((K, conv_ch), (None, "inner"), dt, "conv"),
+        "dt_bias": P((H,), (None,), "float32", "zeros"),
+        "a_log": P((H,), (None,), "float32", "a_log"),
+        "d_skip": P((di,), ("inner",), "float32", "ones"),
+        "w_out": P((di, D), ("inner", "embed"), dt),
+    }
+
+
+def _mlp_specs(cfg: ModelConfig, ff: int) -> Dict[str, P]:
+    D, dt = cfg.d_model, _dt(cfg)
+    return {
+        "w_gate": P((D, ff), ("embed", "ff"), dt),
+        "w_up": P((D, ff), ("embed", "ff"), dt),
+        "w_down": P((ff, D), ("ff", "embed"), dt),
+    }
+
+
+def moe_experts_padded(cfg: ModelConfig, n_axis: int = 16) -> int:
+    """Meets-or-exceeds rule (paper §2.4): round the expert count up to the
+    next multiple of the EP axis so the expert dim divides it."""
+    e = cfg.moe_experts
+    return int(math.ceil(e / n_axis) * n_axis)
+
+
+def _moe_specs(cfg: ModelConfig) -> Dict[str, Any]:
+    D, F, dt = cfg.d_model, cfg.d_ff, _dt(cfg)
+    E = moe_experts_padded(cfg)
+    s: Dict[str, Any] = {
+        "router": P((D, E), ("embed", None), "float32"),
+        "w_gate": P((E, D, F), ("expert", "embed", None), dt),
+        "w_up": P((E, D, F), ("expert", "embed", None), dt),
+        "w_down": P((E, F, D), ("expert", None, "embed"), dt),
+    }
+    if cfg.moe_shared_ff:
+        s["shared"] = _mlp_specs(cfg, cfg.moe_shared_ff)
+    return s
+
+
+def _slot_specs(cfg: ModelConfig, i: int) -> Dict[str, Any]:
+    kind = cfg.layer_kind(i)
+    s: Dict[str, Any] = {"norm1": P((cfg.d_model,), (None,), "float32",
+                                    "zeros")}
+    if kind == "attn":
+        s["attn"] = _mla_specs(cfg) if cfg.mla else _attn_specs(cfg)
+    else:
+        s["mamba"] = _mamba_specs(cfg)
+    s["norm2"] = P((cfg.d_model,), (None,), "float32", "zeros")
+    if cfg.layer_is_moe(i):
+        s["moe"] = _moe_specs(cfg)
+    elif cfg.d_ff > 0:
+        s["mlp"] = _mlp_specs(cfg, cfg.d_ff)
+    return s
+
+
+def param_specs(cfg: ModelConfig) -> Dict[str, Any]:
+    per = cfg.period
+    n_per = cfg.n_layers // per
+    tail = cfg.n_layers % per
+    dt = _dt(cfg)
+    V, D = cfg.padded_vocab, cfg.d_model
+
+    def stack(spec: P) -> P:
+        return P((n_per,) + spec.shape, (None,) + spec.axes, spec.dtype,
+                 spec.init)
+
+    specs: Dict[str, Any] = {}
+    if cfg.input_mode == "tokens":
+        # vocab-sharded only: 2-D sharding of the table makes the SPMD
+        # partitioner replicate it around gather/scatter-add (measured:
+        # +6 GB/device on 104B); vocab-parallel gather + all-reduce is the
+        # efficient lowering.
+        specs["embed"] = P((V, D), ("vocab", None), dt)
+    if not cfg.tie_embeddings:
+        specs["head"] = P((D, V), (None, "vocab"), dt)
+    specs["norm_f"] = P((D,), (None,), "float32", "zeros")
+    if n_per > 0:
+        specs["period_slots"] = [
+            jax.tree.map(stack, _slot_specs(cfg, s),
+                         is_leaf=lambda x: isinstance(x, P))
+            for s in range(per)
+        ]
+    specs["tail_slots"] = [_slot_specs(cfg, n_per * per + i)
+                           for i in range(tail)]
+    return specs
+
+
+# --------------------------------------------------------------------------
+# materialization
+
+
+def abstract_params(cfg: ModelConfig):
+    def leaf(p: P):
+        return jax.ShapeDtypeStruct(p.shape, jnp.dtype(p.dtype))
+    return jax.tree.map(leaf, param_specs(cfg),
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def init_params(cfg: ModelConfig, seed: int = 0):
+    """Real initialization — used only for reduced smoke/test configs."""
+    specs = param_specs(cfg)
+    leaves, treedef = jax.tree.flatten(
+        specs, is_leaf=lambda x: isinstance(x, P))
+    rng = np.random.RandomState(seed)
+    out = []
+    for p in leaves:
+        if p.init == "zeros":
+            a = np.zeros(p.shape, np.float32)
+        elif p.init == "ones":
+            a = np.ones(p.shape, np.float32)
+        elif p.init == "a_log":
+            a = np.log(np.linspace(1.0, 8.0, int(np.prod(p.shape))
+                                   )).reshape(p.shape)
+        elif p.init == "conv":
+            a = rng.normal(0, 0.2, p.shape)
+        else:
+            fan_in = p.shape[0] if len(p.shape) == 1 else int(
+                np.prod(p.shape[:-1]))
+            a = rng.normal(0, 1.0 / math.sqrt(max(1, fan_in)), p.shape)
+        out.append(jnp.asarray(a, jnp.dtype(p.dtype)))
+    return jax.tree.unflatten(treedef, out)
+
+
+# --------------------------------------------------------------------------
+# cache specs (decode)
+
+
+def cache_slot_specs(cfg: ModelConfig, i: int, batch: int, seq: int
+                     ) -> Dict[str, P]:
+    kind = cfg.layer_kind(i)
+    dt = _dt(cfg)
+    if kind == "attn":
+        w = cfg.layer_window(i)
+        if cfg.window_cache and w is not None:
+            # rolling window cache: local-attention layers never need more
+            # than `window` KV entries
+            seq = min(seq, w)
+        if cfg.mla:
+            return {
+                "ckv": P((batch, seq, cfg.kv_lora_rank),
+                         ("act_batch", "kv_seq", None), dt),
+                "k_rope": P((batch, seq, cfg.qk_rope_dim),
+                            ("act_batch", "kv_seq", None), dt),
+            }
+        return {
+            "k": P((batch, seq, cfg.n_kv_heads, cfg.hd),
+                   ("act_batch", "kv_seq", "act_kv", None), dt),
+            "v": P((batch, seq, cfg.n_kv_heads, cfg.hd),
+                   ("act_batch", "kv_seq", "act_kv", None), dt),
+        }
+    G = 1
+    conv_ch = cfg.d_inner + 2 * G * cfg.ssm_state
+    return {
+        "conv": P((batch, cfg.ssm_conv - 1, conv_ch),
+                  ("act_batch", None, "inner"), dt),
+        "state": P((batch, cfg.ssm_heads, cfg.ssm_state, cfg.ssm_head_dim),
+                   ("act_batch", "act_heads", None, None), dt),
+    }
+
+
+def cache_specs(cfg: ModelConfig, batch: int, seq: int) -> Dict[str, Any]:
+    per = cfg.period
+    n_per = cfg.n_layers // per
+    tail = cfg.n_layers % per
+
+    def stack(spec: P) -> P:
+        return P((n_per,) + spec.shape, (None,) + spec.axes, spec.dtype)
+
+    out: Dict[str, Any] = {}
+    if n_per:
+        out["period_slots"] = [
+            jax.tree.map(stack, cache_slot_specs(cfg, s, batch, seq),
+                         is_leaf=lambda x: isinstance(x, P))
+            for s in range(per)]
+    out["tail_slots"] = [cache_slot_specs(cfg, n_per * per + i, batch, seq)
+                         for i in range(tail)]
+    return out
+
+
+def abstract_cache(cfg: ModelConfig, batch: int, seq: int):
+    def leaf(p: P):
+        return jax.ShapeDtypeStruct(p.shape, jnp.dtype(p.dtype))
+    return jax.tree.map(leaf, cache_specs(cfg, batch, seq),
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+# --------------------------------------------------------------------------
+# forward
+
+
+def _norm(x, scale, cfg: ModelConfig, shard, mesh):
+    """Norm dispatch: the distributed (psum-stats) norm avoids the
+    partitioner's f32 full-residual all-gather when the residual is
+    model-sharded on D (EXPERIMENTS.md §Perf, command-r iteration 3)."""
+    if cfg.dist_norm and mesh is not None and x.ndim == 3:
+        msize = dict(zip(mesh.axis_names, mesh.devices.shape)).get("model", 0)
+        if msize and x.shape[-1] % msize == 0:
+            return L.norm_dist(x, scale, cfg, mesh)
+    return L.norm(x, scale, cfg)
+
+
+def _block(x, slot_params, cfg: ModelConfig, slot_idx: int, *, positions,
+           cache=None, shard: L.Shard = L._noshard, mesh=None):
+    kind = cfg.layer_kind(slot_idx)
+    h = _norm(x, slot_params["norm1"], cfg, shard, mesh)
+    if kind == "attn":
+        window = cfg.layer_window(slot_idx)
+        if cfg.mla:
+            y, new_cache = L.mla_block(h, slot_params["attn"], cfg,
+                                       positions=positions, cache=cache,
+                                       shard=shard)
+        else:
+            y, new_cache = L.attention_block(h, slot_params["attn"], cfg,
+                                             positions=positions,
+                                             window=window, cache=cache,
+                                             shard=shard)
+    else:
+        y, new_cache = L.mamba_block(h, slot_params["mamba"], cfg,
+                                     cache=cache, shard=shard)
+    # constrain the mixer output to the residual layout BEFORE the add:
+    # the TP contraction then lowers to reduce-scatter instead of
+    # all-reduce (16x fewer collective bytes; EXPERIMENTS.md §Perf)
+    y = shard(y, ("act_batch", "act_seq", "act_embed"))
+    x = x + y
+    h2 = _norm(x, slot_params["norm2"], cfg, shard, mesh)
+    if "moe" in slot_params:
+        B, S = h2.shape[0], h2.shape[1]
+        msize = (dict(zip(mesh.axis_names, mesh.devices.shape))
+                 .get("model", 0)) if mesh is not None else 0
+        use_a2a = (cfg.moe_impl == "a2a" and mesh is not None
+                   and msize > 0 and S % msize == 0
+                   and moe_experts_padded(cfg) % msize == 0)
+        if use_a2a:
+            from .moe_a2a import moe_ffn_a2a
+            f = moe_ffn_a2a(h2, slot_params["moe"], cfg,
+                            n_experts_padded=moe_experts_padded(cfg),
+                            mesh=mesh)
+            if cfg.moe_shared_ff:
+                f = f + L.mlp(h2, slot_params["moe"]["shared"], cfg)
+        else:
+            f = L.moe_ffn(h2, slot_params["moe"], cfg,
+                          n_experts_padded=moe_experts_padded(cfg),
+                          shard=shard)
+        x = x + shard(f, ("act_batch", "act_seq", "act_embed"))
+    elif "mlp" in slot_params:
+        f = L.mlp(h2, slot_params["mlp"], cfg)
+        x = x + shard(f, ("act_batch", "act_seq", "act_embed"))
+    x = shard(x, ("act_batch", "act_seq", "act_embed"))
+    return x, new_cache
+
+
+def _stack_forward(params, x, cfg: ModelConfig, *, positions, cache=None,
+                   shard: L.Shard = L._noshard, mesh=None):
+    """Run all layers: scan over periods (slots unrolled inside), then the
+    unrolled tail. Returns (hidden, new_cache_or_None)."""
+    per = cfg.period
+    n_per = cfg.n_layers // per
+    decode = cache is not None
+
+    new_period_caches = None
+    if n_per > 0:
+        slots = params["period_slots"]
+        if decode:
+            def period_fn(carry, xs):
+                h = carry
+                slot_params, slot_caches = xs
+                new_caches = []
+                for s in range(per):
+                    h, nc = _block(h, slot_params[s], cfg, s,
+                                   positions=positions,
+                                   cache=slot_caches[s], shard=shard,
+                                   mesh=mesh)
+                    new_caches.append(nc)
+                return h, new_caches
+            x, new_period_caches = L.maybe_scan(
+                period_fn, x, (slots, cache["period_slots"]),
+                unroll=cfg.unroll_scans)
+        else:
+            def period_fn(carry, slot_params):
+                h = carry
+                for s in range(per):
+                    h, _ = _block(h, slot_params[s], cfg, s,
+                                  positions=positions, shard=shard,
+                                  mesh=mesh)
+                return h, None
+            fn = period_fn
+            if cfg.remat:
+                fn = jax.checkpoint(
+                    period_fn,
+                    policy=jax.checkpoint_policies.nothing_saveable)
+            x, _ = L.maybe_scan(fn, x, slots, unroll=cfg.unroll_scans)
+
+    new_tail = []
+    for i, slot_params in enumerate(params["tail_slots"]):
+        li = n_per * per + i
+        c = cache["tail_slots"][i] if decode else None
+        x, nc = _block(x, slot_params, cfg, li, positions=positions,
+                       cache=c, shard=shard, mesh=mesh)
+        new_tail.append(nc)
+    if decode:
+        new_cache = {"period_slots": new_period_caches,
+                     "tail_slots": new_tail}
+        return x, new_cache
+    return x, None
+
+
+def _embed(params, cfg: ModelConfig, tokens_or_emb):
+    if cfg.input_mode == "tokens":
+        x = params["embed"][tokens_or_emb]        # gather
+        return x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)
+    return tokens_or_emb.astype(jnp.dtype(cfg.dtype))
+
+
+def _head(params, cfg: ModelConfig, h):
+    if cfg.tie_embeddings:
+        return jnp.einsum("bsd,vd->bsv", h, params["embed"])
+    return jnp.einsum("bsd,dv->bsv", h, params["head"])
+
+
+def chunked_xent(params, cfg: ModelConfig, h, labels, chunk: int = 256,
+                 shard: L.Shard = L._noshard):
+    """Cross-entropy without materializing (B,S,V) logits: scan over
+    sequence chunks."""
+    B, S, D = h.shape
+    nch = max(1, S // chunk)
+    hc = h.reshape(B, nch, S // nch, D)
+    lc = labels.reshape(B, nch, S // nch)
+
+    @partial(jax.checkpoint, policy=jax.checkpoint_policies.nothing_saveable)
+    def step(acc, xs):
+        hh, ll = xs                                # (B,c,D), (B,c)
+        logits = _head(params, cfg, hh).astype(jnp.float32)
+        logits = shard(logits, ("act_batch", None, "vocab"))
+        lse = jax.scipy.special.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, ll[..., None], axis=-1)[..., 0]
+        return acc + jnp.sum(lse - gold), None
+
+    total, _ = L.maybe_scan(step, jnp.zeros((), jnp.float32),
+                            (jnp.moveaxis(hc, 1, 0), jnp.moveaxis(lc, 1, 0)),
+                            unroll=cfg.unroll_scans)
+    return total / (B * S)
+
+
+def build_forward(cfg: ModelConfig, shard: L.Shard = L._noshard,
+                  mesh=None):
+    """Returns pure functions: loss_fn / prefill_fn / decode_fn."""
+
+    def loss_fn(params, batch):
+        x = _embed(params, cfg, batch["tokens"])
+        x = shard(x, ("act_batch", "act_seq", "act_embed"))
+        pos = batch.get("positions")
+        if pos is None:
+            B, S = x.shape[0], x.shape[1]
+            pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+        h, _ = _stack_forward(params, x, cfg, positions=pos, shard=shard,
+                              mesh=mesh)
+        h = L.norm(h, params["norm_f"], cfg)
+        return chunked_xent(params, cfg, h, batch["labels"], shard=shard)
+
+    def prefill_fn(params, batch):
+        """Full-sequence forward returning last-token logits. (The serving
+        layer also captures the KV cache; for dry-run cost purposes the
+        compute/comm profile is identical.)"""
+        x = _embed(params, cfg, batch["tokens"])
+        x = shard(x, ("act_batch", "act_seq", "act_embed"))
+        pos = batch.get("positions")
+        if pos is None:
+            B, S = x.shape[0], x.shape[1]
+            pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+        h, _ = _stack_forward(params, x, cfg, positions=pos, shard=shard,
+                              mesh=mesh)
+        h = L.norm(h[:, -1:], params["norm_f"], cfg)
+        return _head(params, cfg, h)
+
+    def decode_fn(params, cache, batch):
+        """One decode step against a full KV cache. ``batch["positions"]``
+        (B, 1) carries the current decode index (rope phase / cache slot)."""
+        x = _embed(params, cfg, batch["tokens"])   # (B,1) or (B,1,D)
+        x = shard(x, ("act_batch", None, "act_embed"))
+        pos = batch["positions"]
+        h, new_cache = _stack_forward(params, x, cfg, positions=pos,
+                                      cache=cache, shard=shard, mesh=mesh)
+        h = L.norm(h, params["norm_f"], cfg)
+        return _head(params, cfg, h), new_cache
+
+    return loss_fn, prefill_fn, decode_fn

@@ -1,0 +1,2 @@
+from .adamw import adamw_init, adamw_update  # noqa: F401
+from .adafactor import adafactor_init, adafactor_update  # noqa: F401

@@ -1,0 +1,66 @@
+"""Adafactor (factored second moments): the memory-lean optimizer option for
+the largest configs — second-moment state is O(rows+cols) instead of O(n)."""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdafactorState(NamedTuple):
+    step: jnp.ndarray
+    vr: Any   # row statistics (or full for rank<2)
+    vc: Any   # col statistics
+
+
+def _factored(p):
+    return p.ndim >= 2
+
+
+def adafactor_init(params) -> AdafactorState:
+    def vr(p):
+        if _factored(p):
+            return jnp.zeros(p.shape[:-1], jnp.float32)
+        return jnp.zeros(p.shape, jnp.float32)
+
+    def vc(p):
+        if _factored(p):
+            return jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)
+        return jnp.zeros((1,), jnp.float32)
+
+    return AdafactorState(jnp.zeros((), jnp.int32),
+                          jax.tree.map(vr, params), jax.tree.map(vc, params))
+
+
+def adafactor_update(params, grads, state: AdafactorState, *, lr=1e-4,
+                     decay=0.8, eps=1e-30, clip_norm=1.0):
+    step = state.step + 1
+    beta = 1.0 - step.astype(jnp.float32) ** (-decay)
+
+    def upd(p, g, vr, vc):
+        g = g.astype(jnp.float32)
+        g2 = jnp.square(g) + eps
+        if _factored(p):
+            vr_n = beta * vr + (1 - beta) * g2.mean(axis=-1)
+            vc_n = beta * vc + (1 - beta) * g2.mean(axis=-2)
+            denom = (vr_n[..., None] * vc_n[..., None, :]
+                     / jnp.maximum(vr_n.mean(axis=-1)[..., None, None], eps))
+            u = g * jax.lax.rsqrt(jnp.maximum(denom, eps))
+        else:
+            vr_n = beta * vr + (1 - beta) * g2
+            vc_n = vc
+            u = g * jax.lax.rsqrt(jnp.maximum(vr_n, eps))
+        # relative update clipping
+        rms = jnp.sqrt(jnp.mean(jnp.square(u)) + 1e-12)
+        u = u / jnp.maximum(1.0, rms / clip_norm)
+        return (p.astype(jnp.float32) - lr * u).astype(p.dtype), vr_n, vc_n
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_r = treedef.flatten_up_to(state.vr)
+    flat_c = treedef.flatten_up_to(state.vc)
+    out = [upd(*t) for t in zip(flat_p, flat_g, flat_r, flat_c)]
+    return (treedef.unflatten([o[0] for o in out]),
+            AdafactorState(step, treedef.unflatten([o[1] for o in out]),
+                           treedef.unflatten([o[2] for o in out])))

@@ -1,0 +1,3 @@
+from .mapper import (ShardingMapper, choose_rules, param_shardings,  # noqa
+                     spec_shardings)
+from .hlo import collective_bytes  # noqa: F401

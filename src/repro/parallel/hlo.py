@@ -1,0 +1,54 @@
+"""HLO-text analysis: collective byte counting for the roofline.
+
+``cost_analysis()`` does not report collective bytes, so we parse the
+compiled/optimized HLO and sum operand sizes of every communication op
+(all-gather, all-reduce, reduce-scatter, all-to-all, collective-permute).
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+}
+
+# e.g.  %all-reduce.5 = f32[16,1024]{1,0} all-reduce(...)
+_COLL_RE = re.compile(
+    r"=\s*(?:\(?)([a-z0-9]+)\[([\d,]*)\][^=]*?\s"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"[\s(.]")
+
+# tuple-result collectives:  = (f32[..], f32[..]) all-reduce(
+_TUPLE_RE = re.compile(
+    r"=\s*\(([^)]*)\)\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"[\s(.]")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+
+
+def _nbytes(dtype: str, dims: str) -> int:
+    n = _DTYPE_BYTES.get(dtype, 4)
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Total bytes moved per collective kind (result-shape accounting)."""
+    out: Dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if m:
+            dtype, dims, kind = m.groups()
+            out[kind] = out.get(kind, 0) + _nbytes(dtype, dims)
+            continue
+        m = _TUPLE_RE.search(line)
+        if m:
+            shapes, kind = m.groups()
+            total = sum(_nbytes(d, s) for d, s in _SHAPE_RE.findall(shapes))
+            out[kind] = out.get(kind, 0) + total
+    out["total"] = sum(v for k, v in out.items() if k != "total")
+    return out

@@ -1,0 +1,143 @@
+"""Meets-or-exceeds sharding mapper.
+
+This is the paper's §5.3 discipline applied to SPMD partitioning: every
+tensor dimension carries a *logical axis* name that requests a mesh mapping;
+if the requested mapping is illegal (the dim does not divide the mesh axes),
+the mapper walks a fallback chain — alternate axis combination, then
+replication — rather than failing, exactly like HWTool's vector-width
+round-up / interface-conversion rules (fig. 6). Padded dims (vocab, experts)
+are the round-up case. Every decision is logged for the Controllability goal
+(§1): the dry-run prints the mapping report.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+AxisChain = List[Tuple[str, ...]]   # candidates in preference order
+
+# parameter logical axes
+PARAM_RULES: Dict[str, AxisChain] = {
+    "vocab": [("model",)],
+    "embed": [("data",)],            # FSDP / ZeRO-3 weight sharding
+    "ff": [("model",)],
+    "inner": [("model",)],           # mamba d_inner
+    "heads": [("model",)],
+    "kv_heads": [("model",)],
+    "expert": [("model",)],          # EP
+}
+
+# activation logical axes
+ACT_RULES: Dict[str, AxisChain] = {
+    "act_batch": [("pod", "data"), ("data",)],
+    "act_seq": [()],                 # context-parallel variants override
+    "act_heads": [("model",)],
+    "act_kv": [("model",)],
+    # residual stream sharded over model between layers (Megatron-SP style:
+    # the partitioner inserts all-gather before qkv/mlp and reduce-scatter
+    # after wo/w_down) — keeps saved layer boundaries at D/16 per device
+    "act_embed": [("model",)],
+    "act_cap": [("data",)],          # MoE capacity dim
+    "kv_seq": [("pod", "model"), ("model",)],   # decode cache sequence
+    "vocab": [("model",)],
+}
+
+
+@dataclass
+class ShardingMapper:
+    mesh: Mesh
+    rules: Dict[str, AxisChain]
+    decisions: List[str] = field(default_factory=list)
+    _seen: set = field(default_factory=set)
+
+    def _log(self, msg: str):
+        if msg not in self._seen:
+            self._seen.add(msg)
+            self.decisions.append(msg)
+
+    def resolve(self, shape: Sequence[int],
+                axes: Sequence[Optional[str]]) -> PartitionSpec:
+        """Pick a legal PartitionSpec for `shape` given logical `axes`."""
+        mesh_sizes = dict(zip(self.mesh.axis_names, self.mesh.devices.shape))
+        used: set = set()
+        out = []
+        for dim, name in zip(shape, axes):
+            if name is None or name not in self.rules:
+                out.append(None)
+                continue
+            chosen = None
+            for cand in self.rules[name]:
+                cand = tuple(a for a in cand if a in mesh_sizes)
+                if not cand:
+                    chosen = ()
+                    break
+                size = int(np.prod([mesh_sizes[a] for a in cand]))
+                if dim % size == 0 and not (set(cand) & used):
+                    chosen = cand
+                    break
+            if chosen is None:
+                self._log(f"{name}: dim {dim} !% any of "
+                          f"{self.rules[name]} -> replicate "
+                          f"(meets-or-exceeds fallback)")
+                out.append(None)
+            elif chosen == ():
+                out.append(None)
+            else:
+                if chosen != tuple(a for a in self.rules[name][0]
+                                   if a in mesh_sizes):
+                    self._log(f"{name}: dim {dim} -> fallback {chosen}")
+                used |= set(chosen)
+                out.append(chosen if len(chosen) > 1 else chosen[0])
+        return PartitionSpec(*out)
+
+    def named(self, shape, axes) -> NamedSharding:
+        return NamedSharding(self.mesh, self.resolve(shape, axes))
+
+    def shard(self, x, axes):
+        """Activation constraint hook (with_sharding_constraint)."""
+        spec = self.resolve(x.shape, axes)
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, spec))
+
+
+def choose_rules(cfg, mesh: Mesh) -> Tuple[Dict[str, AxisChain], List[str]]:
+    """Arch-aware rule selection (the 'mapping function' for an arch):
+    if attention heads do not divide the model axis, fall back to
+    context-parallel attention (shard sequence instead of heads) — the
+    TPU analog of 'a more complex signaling protocol' (§2.4)."""
+    rules = {**PARAM_RULES, **ACT_RULES}
+    notes: List[str] = []
+    msize = dict(zip(mesh.axis_names, mesh.devices.shape)).get("model", 1)
+    if cfg.layer_kind(0) == "attn" or "attn" in cfg.pattern:
+        if cfg.n_heads % msize != 0 and not cfg.mla:
+            rules = dict(rules)
+            rules["act_seq"] = [("model",)]
+            rules["act_heads"] = [()]
+            notes.append(
+                f"{cfg.name}: {cfg.n_heads} heads !% model({msize}) -> "
+                f"context-parallel attention (act_seq -> model)")
+    return rules, notes
+
+
+def spec_shardings(mapper: ShardingMapper, spec_tree):
+    """Map a model P-spec tree to NamedShardings."""
+    from repro.models.model import P
+
+    def leaf(p: P):
+        return mapper.named(p.shape, p.axes)
+
+    return jax.tree.map(leaf, spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def param_shardings(cfg, mesh: Mesh):
+    """Convenience: (shardings tree, mapper) for a model config."""
+    from repro.models.model import param_specs
+    rules, notes = choose_rules(cfg, mesh)
+    mapper = ShardingMapper(mesh, rules)
+    mapper.decisions.extend(notes)
+    return spec_shardings(mapper, param_specs(cfg)), mapper

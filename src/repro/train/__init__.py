@@ -1,0 +1,1 @@
+from .steps import build_train_step, build_serve_steps, input_specs  # noqa

@@ -1,0 +1,123 @@
+"""Step builders: train_step (fwd+bwd+AdamW), prefill_step, decode_step,
+and the ShapeDtypeStruct input specs for every (arch x shape) dry-run cell.
+
+Distributed-optimization options (config-driven):
+  - microbatch gradient accumulation (overlaps per-microbatch grads' comm
+    with the next microbatch's compute under XLA latency hiding)
+  - int8 gradient compression for the cross-pod reduction (quantize /
+    dequantize around the DP all-reduce; the pod axis is the slow hop)
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import build_forward
+from repro.models.config import ModelConfig
+from repro.models.model import abstract_cache
+from repro.optim import adamw_init, adamw_update
+
+
+@dataclass(frozen=True)
+class StepOptions:
+    microbatch: int = 1              # gradient-accumulation chunks
+    grad_compress_int8: bool = False
+
+
+def _int8_compress_grads(grads):
+    """Quantize-dequantize gradients around the DP reduction: with SPMD the
+    actual all-reduce runs on the quantized payload's bytes only if the
+    quantization brackets the psum; under jit+GSPMD we express it as a
+    cast round-trip, which XLA keeps adjacent to the reduction."""
+    def q(g):
+        a = jnp.max(jnp.abs(g)) + 1e-9
+        scale = a / 127.0
+        qg = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+        return qg.astype(jnp.float32) * scale
+    return jax.tree.map(q, grads)
+
+
+def build_train_step(cfg: ModelConfig, shard=lambda x, a: x,
+                     opts: StepOptions = StepOptions(), mesh=None):
+    loss_fn, _, _ = build_forward(cfg, shard=shard, mesh=mesh)
+
+    def train_step(params, opt_state, batch):
+        if opts.microbatch > 1:
+            mb = opts.microbatch
+
+            def split(x):
+                return x.reshape((mb, x.shape[0] // mb) + x.shape[1:])
+
+            mb_batch = jax.tree.map(split, batch)
+
+            def one(carry, xs):
+                acc = carry
+                l, g = jax.value_and_grad(loss_fn)(params, xs)
+                return jax.tree.map(jnp.add, acc,
+                                    (jnp.asarray(l, jnp.float32), g)), None
+
+            zero = (jnp.zeros((), jnp.float32),
+                    jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                 params))
+            from repro.models.layers import maybe_scan
+            (loss_sum, grads), _ = maybe_scan(one, zero, mb_batch,
+                                              unroll=cfg.unroll_scans)
+            loss = loss_sum / mb
+            grads = jax.tree.map(lambda g: g / mb, grads)
+        else:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        if opts.grad_compress_int8:
+            grads = _int8_compress_grads(grads)
+        new_params, new_opt, gnorm = adamw_update(params, grads, opt_state)
+        return new_params, new_opt, {"loss": loss, "gnorm": gnorm}
+
+    return train_step
+
+
+def build_serve_steps(cfg: ModelConfig, shard=lambda x, a: x, mesh=None):
+    _, prefill_fn, decode_fn = build_forward(cfg, shard=shard, mesh=mesh)
+    return prefill_fn, decode_fn
+
+
+# --------------------------------------------------------------------------
+# dry-run input specs (ShapeDtypeStructs; no allocation)
+
+
+def input_specs(cfg: ModelConfig, shape_name: str, seq: int, batch: int,
+                kind: str) -> Dict[str, Any]:
+    """Stand-ins for every model input of one (arch x shape) cell."""
+    i32 = jnp.int32
+    bf16 = jnp.dtype(cfg.dtype)
+    D = cfg.d_model
+
+    def tok(b, s):
+        if cfg.input_mode == "embeddings":
+            return jax.ShapeDtypeStruct((b, s, D), bf16)
+        return jax.ShapeDtypeStruct((b, s), i32)
+
+    if kind == "train":
+        batch_spec = {"tokens": tok(batch, seq),
+                      "labels": jax.ShapeDtypeStruct((batch, seq), i32)}
+        if cfg.mrope_sections:
+            batch_spec["positions"] = jax.ShapeDtypeStruct((3, batch, seq),
+                                                           i32)
+        return {"batch": batch_spec}
+    if kind == "prefill":
+        batch_spec = {"tokens": tok(batch, seq)}
+        if cfg.mrope_sections:
+            batch_spec["positions"] = jax.ShapeDtypeStruct((3, batch, seq),
+                                                           i32)
+        return {"batch": batch_spec}
+    if kind == "decode":
+        batch_spec = {"tokens": tok(batch, 1),
+                      "positions": jax.ShapeDtypeStruct(
+                          (3, batch, 1) if cfg.mrope_sections else (batch, 1),
+                          i32)}
+        return {"batch": batch_spec,
+                "cache": abstract_cache(cfg, batch, seq)}
+    raise ValueError(kind)

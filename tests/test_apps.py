@@ -1,0 +1,45 @@
+"""Bit-accurate app correctness: executor vs independent numpy goldens."""
+import numpy as np
+import pytest
+
+from repro.apps import (Convolution, Descriptor, Flow, Stereo,
+                        golden_convolution, golden_descriptor, golden_flow,
+                        golden_stereo)
+from repro.core.executor import evaluate
+
+rng = np.random.RandomState(7)
+
+
+def test_convolution_golden():
+    conv = Convolution(w=96, h=40)
+    img = rng.randint(0, 256, (40, 96)).astype(np.int64)
+    out = evaluate(conv.build()[1], {"convolution.in": img})
+    assert np.array_equal(out, golden_convolution(img, conv.kernel))
+
+
+@pytest.mark.parametrize("nd", [8, 16])
+def test_stereo_golden(nd):
+    st = Stereo(w=64, h=24, nd=nd)
+    left = rng.randint(0, 256, (24, 64)).astype(np.int64)
+    right = np.roll(left, 3, axis=1)
+    out = evaluate(st.build()[1], {"stereo.in": (left, right)})
+    assert np.array_equal(out, golden_stereo(left, right, nd=nd))
+
+
+def test_flow_golden():
+    fl = Flow(w=48, h=24)
+    i1 = rng.randint(0, 256, (24, 48)).astype(np.int64)
+    i2 = np.roll(i1, 1, axis=1)
+    u, v = evaluate(fl.build()[1], {"flow.in": (i1, i2)})
+    gu, gv = golden_flow(i1, i2)
+    assert np.allclose(u, gu, rtol=1e-6)
+    assert np.allclose(v, gv, rtol=1e-6)
+
+
+def test_descriptor_golden():
+    de = Descriptor(w=64, h=48, n_features=32)
+    img = rng.randint(0, 256, (48, 64)).astype(np.int64)
+    vals, idx = evaluate(de.build()[1], {"descriptor.in": img})
+    gv, gi = golden_descriptor(img, n_features=32)
+    assert np.allclose(np.asarray(vals).reshape(32, 4), gv, rtol=1e-6)
+    assert np.array_equal(idx, gi)

@@ -1,0 +1,110 @@
+"""Property tests (hypothesis) for the paper's two solvers: FIFO register
+minimization (§4.2) and the schedule-trace burst fit (§4.3)."""
+import numpy as np
+from fractions import Fraction
+
+from hypothesis import given, settings, strategies as st
+
+from repro.core import buffers as buf
+from repro.core import schedule as sched
+
+
+# ---- random DAG generator ----
+
+@st.composite
+def dags(draw):
+    n = draw(st.integers(3, 12))
+    edges = []
+    for dst in range(1, n):
+        n_in = draw(st.integers(1, min(3, dst)))
+        srcs = draw(st.lists(st.integers(0, dst - 1), min_size=n_in,
+                             max_size=n_in, unique=True))
+        for src in srcs:
+            edges.append(buf.Edge(
+                src, dst,
+                token_bits=draw(st.integers(1, 64)),
+                src_latency=draw(st.integers(0, 50)),
+                src_burst=draw(st.integers(0, 10))))
+    return n, edges
+
+
+@given(dags())
+@settings(max_examples=40, deadline=None)
+def test_buffer_solution_feasible_and_optimal(d):
+    n, edges = d
+    z3_sol = buf.solve_buffers(n, edges, solver="z3")
+    lp_sol = buf.solve_buffers(n, edges, solver="lp")
+    asap = buf.solve_buffers(n, edges, solver="asap")
+    # feasibility: every slack non-negative (asserted inside), starts >= 0
+    assert all(s >= 0 for s in z3_sol.start)
+    # optimality: z3 == lp (both exact), both <= asap (a feasible schedule)
+    assert z3_sol.total_bits == lp_sol.total_bits
+    assert z3_sol.total_bits <= asap.total_bits
+
+
+@given(dags(), st.integers(1, 1000))
+@settings(max_examples=20, deadline=None)
+def test_buffer_solution_shift_invariant(d, shift):
+    """Uniformly shifting all starts preserves feasibility (the traces are
+    shift-invariant, §4.2) — the solver pins the earliest start to 0."""
+    n, edges = d
+    sol = buf.solve_buffers(n, edges, solver="z3")
+    assert min(sol.start) == 0
+
+
+# ---- schedule traces ----
+
+@given(st.integers(1, 8), st.integers(1, 8), st.integers(0, 30),
+       st.integers(0, 10))
+@settings(max_examples=60, deadline=None)
+def test_fit_recovers_model_trace(num, den, L, s):
+    """Fitting the model's own trace recovers (L+s, B=0)."""
+    R = Fraction(min(num, den), den)
+    t = np.arange(L + s + 200, dtype=np.int64)
+    actual = sched.trace(R, L, s, t)
+    L_fit, B_fit = sched.fit_LB(actual, R)
+    assert B_fit == 0
+    assert L_fit == L + s or actual[-1] == 0
+
+
+@given(st.integers(1, 6), st.integers(2, 8), st.integers(0, 20),
+       st.lists(st.integers(0, 3), min_size=20, max_size=120))
+@settings(max_examples=40, deadline=None)
+def test_fit_bounds_any_trace(num, den, L, bursts):
+    """For an arbitrary cumulative trace, the fitted model is a lower bound
+    and B bounds the excess: model <= actual <= model + B everywhere."""
+    R = Fraction(min(num, den), den)
+    inc = np.asarray(bursts, dtype=np.int64)
+    actual = np.cumsum(inc)
+    L_fit, B_fit = sched.fit_LB(actual, R)
+    t = np.arange(len(actual), dtype=np.int64)
+    model = sched.trace(R, L_fit, 0, t)
+    assert np.all(model <= actual)
+    assert np.all(actual - model <= B_fit)
+
+
+def test_finish_cycle_closed_form():
+    R, L, s, n = Fraction(3, 7), 11, 4, 1000
+    tc = sched.finish_cycle(R, L, s, n)
+    t = np.arange(tc + 2, dtype=np.int64)
+    tr = sched.trace(R, L, s, t)
+    assert tr[tc] >= n and tr[tc - 1] < n
+
+
+def test_z3_repeated_solves_stay_fast():
+    """Regression: Z3's shared global context degraded after ~12 Optimize
+    solves (a 0.1s instance hung minutes). buffers.py now uses a fresh
+    Context per solve; 30 sequential solves must stay sub-second each."""
+    import time
+    rngs = np.random.RandomState(0)
+    for trial in range(30):
+        n = 10
+        edges = []
+        for dst in range(1, n):
+            for src in rngs.choice(dst, size=min(2, dst), replace=False):
+                edges.append(buf.Edge(int(src), dst,
+                                      int(rngs.randint(1, 2049)),
+                                      int(rngs.randint(0, 20000)), 0))
+        t0 = time.time()
+        buf.solve_buffers(n, edges, solver="z3")
+        assert time.time() - t0 < 5.0, trial

@@ -1,0 +1,77 @@
+"""End-to-end system tests: the full HWTool flow on the paper's pipelines,
+validated against the paper's own published numbers (fig. 9)."""
+import numpy as np
+import pytest
+from fractions import Fraction
+
+from repro.apps import Convolution, Stereo, golden_convolution, golden_stereo
+from repro.core import compile_pipeline
+from repro.core.executor import evaluate
+
+
+# paper fig. 9: CONVOLUTION at each throughput -> (T_eff, cycles)
+PAPER_CONV = {
+    Fraction(1, 8): (0.12, 16_851_000),
+    Fraction(1, 4): (0.25, 8_425_000),
+    Fraction(1, 2): (0.49, 4_213_000),
+    Fraction(1): (0.98, 2_106_000),
+    Fraction(2): (1.97, 1_053_000),
+    Fraction(4): (3.94, 527_000),
+    Fraction(8): (7.87, 263_000),
+}
+
+
+@pytest.mark.parametrize("T", sorted(PAPER_CONV))
+def test_convolution_matches_paper_fig9(T):
+    d = compile_pipeline(Convolution(), T=T)
+    t_eff, cycles = PAPER_CONV[T]
+    # throughput normalization reproduces the paper's T column (which is
+    # rounded to 2-3 significant digits; 7.8755 vs printed 7.87)
+    assert abs(float(d.T) - t_eff) < 0.01, (float(d.T), t_eff)
+    # cycle counts within ~1% (ours include pipeline-fill latency)
+    assert abs(d.cycles_per_frame() - cycles) / cycles < 0.011
+    assert d.check_schedule()
+
+
+def test_conv_resource_scaling_near_linear():
+    """Paper fig. 10: compute resources scale ~linearly with T."""
+    clbs = {}
+    for T in [Fraction(1), Fraction(4)]:
+        clbs[T] = compile_pipeline(Convolution(), T=T).resources.clbs
+    ratio = clbs[Fraction(4)] / clbs[Fraction(1)]
+    assert 3.0 < ratio < 5.0, ratio
+
+
+def test_auto_fifo_overhead_vs_manual():
+    """Paper §7.3 / fig. 11: automatic FIFO allocation costs BRAM vs the
+    manual allocation (DMA absorbs pad/crop bursts); compute cost is the
+    same."""
+    auto = compile_pipeline(Convolution(), T=Fraction(1))
+    manual = compile_pipeline(Convolution(), T=Fraction(1),
+                              manual_fifo_overrides={"crop": 0, "pad": 0})
+    assert auto.resources.brams > manual.resources.brams
+    assert auto.resources.brams <= 4 * manual.resources.brams
+    assert abs(auto.resources.clbs - manual.resources.clbs) < 32
+
+
+def test_compiled_design_runs_bit_exact():
+    conv = Convolution(w=64, h=32)
+    d = compile_pipeline(conv, T=Fraction(1))
+    rng = np.random.RandomState(0)
+    img = rng.randint(0, 256, (32, 64)).astype(np.int64)
+    out = d.run({"convolution.in": img})
+    assert np.array_equal(out, golden_convolution(img, conv.kernel))
+
+
+def test_stereo_static_interface():
+    """Stereo has no bursty ops -> the interface solve keeps it Static."""
+    d = compile_pipeline(Stereo(w=64, h=16, nd=8), T=Fraction(1, 2))
+    assert d.kind == "Static"
+    assert d.check_schedule()
+
+
+def test_solver_modes_agree():
+    """Z3 and LP both solve register minimization exactly -> equal totals."""
+    a = compile_pipeline(Convolution(), T=Fraction(1), fifo_solver="z3")
+    b = compile_pipeline(Convolution(), T=Fraction(1), fifo_solver="lp")
+    assert a.fifo.total_bits == b.fifo.total_bits
