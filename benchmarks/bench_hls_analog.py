@@ -35,6 +35,8 @@ def run(csv_rows):
     xla = jax.jit(_xla_conv)
     lowered = jax.jit(_xla_conv).lower(jnp.asarray(p), jnp.asarray(k))
     cost = lowered.compile().cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):    # older jax: one dict per computation
+        cost = cost[0] if cost else {}
     xla_flops_px = float(cost.get("flops", 0)) / (h * w)
 
     # our mapped design commits 64 multiplies + 63 adds per pixel at T=1

@@ -1,0 +1,77 @@
+"""Backend wall-time benchmark: numpy executor vs automatic jnp lowering
+(vs Pallas fused dispatch, interpret mode) for the paper's four apps.
+
+``write_json`` emits BENCH_kernels.json so the bench trajectory carries the
+numpy-vs-lowered numbers per app alongside the CSV rows.
+"""
+from __future__ import annotations
+
+import json
+import time
+
+import numpy as np
+
+SIZES = {
+    "convolution": dict(w=192, h=96),
+    "stereo": dict(w=96, h=32, nd=16),
+    "flow": dict(w=96, h=48),
+    "descriptor": dict(w=96, h=64, n_features=64),
+}
+
+
+def _time_us(f, n=3):
+    f()                                   # warm (trace/jit/lower)
+    t0 = time.perf_counter()
+    for _ in range(n):
+        f()
+    return (time.perf_counter() - t0) / n * 1e6
+
+
+_memo = None
+
+
+def bench_backends():
+    global _memo                 # run() and write_json() share one measurement
+    if _memo is not None:
+        return _memo
+    from repro.apps import BENCH_CASES
+    from repro.core import compile_pipeline
+    rng = np.random.RandomState(0)
+    out = {}
+    for name, case in BENCH_CASES.items():
+        uf, inputs_fn = case(**SIZES.get(name, {}))
+        design = compile_pipeline(uf)
+        inp = inputs_fn(rng)
+        row = {}
+        for backend in ("numpy", "jax", "pallas"):
+            row[f"{backend}_us"] = round(
+                _time_us(lambda b=backend: design.run(inp, backend=b)))
+        row["fusions"] = len(design.lower("pallas").fusions)
+        row["speedup_jax_vs_numpy"] = round(
+            row["numpy_us"] / max(1, row["jax_us"]), 3)
+        out[name] = row
+    _memo = out
+    return out
+
+
+def write_json(path: str = "BENCH_kernels.json") -> dict:
+    data = {
+        "note": ("wall time per frame, CPU; jax = automatic jnp lowering "
+                 "(eager), pallas = + fused kernel dispatch in interpret "
+                 "mode"),
+        "sizes": SIZES,
+        "apps": bench_backends(),
+    }
+    with open(path, "w") as f:
+        json.dump(data, f, indent=2, sort_keys=True)
+        f.write("\n")
+    return data
+
+
+def run(csv_rows):
+    for name, row in bench_backends().items():
+        csv_rows.append((f"lowering_{name}",
+                         f"{row['jax_us']}",
+                         f"numpy_us={row['numpy_us']},"
+                         f"fusions={row['fusions']}"))
+    return csv_rows

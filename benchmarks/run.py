@@ -1,18 +1,27 @@
 # One function per paper table. Print ``name,us_per_call,derived`` CSV.
+# ``--json`` additionally writes BENCH_kernels.json (numpy executor vs
+# lowered-jax wall time per app, benchmarks/bench_lowering.py).
 from __future__ import annotations
 
+import argparse
 import sys
 
 
 def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", action="store_true",
+                    help="write BENCH_kernels.json (backend wall times)")
+    args = ap.parse_args()
     from benchmarks import (bench_fifo, bench_hls_analog, bench_kernels,
-                            bench_roofline, bench_schedule_range)
+                            bench_lowering, bench_roofline,
+                            bench_schedule_range)
     rows = []
     benches = [
         ("schedule_range (paper fig 9/10)", bench_schedule_range.run),
         ("fifo auto-vs-manual (paper fig 11)", bench_fifo.run),
         ("hls analog (paper §7.4)", bench_hls_analog.run),
         ("kernels", bench_kernels.run),
+        ("lowering backends", bench_lowering.run),
         ("roofline (dry-run artifacts)", bench_roofline.run),
     ]
     for name, fn in benches:
@@ -21,6 +30,12 @@ def main() -> None:
             fn(rows)
         except Exception as e:  # keep the harness going; report the failure
             rows.append((f"FAILED_{name.split()[0]}", "0", repr(e)[:200]))
+    if args.json:
+        print("# writing BENCH_kernels.json", file=sys.stderr, flush=True)
+        try:
+            bench_lowering.write_json("BENCH_kernels.json")
+        except Exception as e:  # don't lose the CSV over a write failure
+            rows.append(("FAILED_json", "0", repr(e)[:200]))
     print("name,us_per_call,derived")
     for r in rows:
         print(",".join(str(x) for x in r))

@@ -10,3 +10,15 @@ PIPELINES = {
     "flow": Flow,
     "descriptor": Descriptor,
 }
+
+# uniform (UserFunction, inputs_fn) small cases for cross-backend tests
+# and benchmarks
+from . import convolution as _conv, descriptor as _desc  # noqa: E402
+from . import flow as _flow, stereo as _stereo  # noqa: E402
+
+BENCH_CASES = {
+    "convolution": _conv.bench_case,
+    "stereo": _stereo.bench_case,
+    "flow": _flow.bench_case,
+    "descriptor": _desc.bench_case,
+}

@@ -45,6 +45,19 @@ class Convolution(UserFunction):
         return Crop(12, 4, 8, 0)(narrowed)
 
 
+def bench_case(w: int = 96, h: int = 40):
+    """Small instance + random-input builder: the uniform app surface used
+    by the cross-backend equivalence suite and benchmarks. ``inputs(rng)``
+    makes one frame; ``inputs(rng, frames=n)`` a batch for run_batch."""
+    uf = Convolution(w=w, h=h)
+
+    def inputs(rng, frames=None):
+        shape = (h, w) if frames is None else (frames, h, w)
+        return {"convolution.in": rng.randint(0, 256, shape).astype(np.int64)}
+
+    return uf, inputs
+
+
 def golden_convolution(img: np.ndarray, kernel: np.ndarray = None
                        ) -> np.ndarray:
     """Independent numpy reference (sliding windows, not the executor)."""

@@ -64,6 +64,17 @@ class Descriptor(UserFunction):
         return SparseTake(sparse, self.n_features)
 
 
+def bench_case(w: int = 64, h: int = 48, n_features: int = 32):
+    """Small instance + random-input builder (see convolution.bench_case)."""
+    uf = Descriptor(w=w, h=h, n_features=n_features)
+
+    def inputs(rng, frames=None):
+        shape = (h, w) if frames is None else (frames, h, w)
+        return {"descriptor.in": rng.randint(0, 256, shape).astype(np.int64)}
+
+    return uf, inputs
+
+
 def golden_descriptor(img: np.ndarray, n_features: int = N_FEATURES):
     h, w = img.shape
     f32 = np.float32

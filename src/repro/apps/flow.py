@@ -55,6 +55,19 @@ class Flow(UserFunction):
         return Concat(u, v)
 
 
+def bench_case(w: int = 48, h: int = 24):
+    """Small instance + random-input builder (see convolution.bench_case)."""
+    uf = Flow(w=w, h=h)
+
+    def inputs(rng, frames=None):
+        shape = (h, w) if frames is None else (frames, h, w)
+        i1 = rng.randint(0, 256, shape).astype(np.int64)
+        i2 = np.roll(i1, 1, axis=-1)
+        return {"flow.in": (i1, i2)}
+
+    return uf, inputs
+
+
 def golden_flow(i1: np.ndarray, i2: np.ndarray):
     h, w = i1.shape
     f32 = np.float32

@@ -33,6 +33,19 @@ class Stereo(UserFunction):
         return ArgMin(sad)                                # disparity index u6
 
 
+def bench_case(w: int = 64, h: int = 24, nd: int = 8):
+    """Small instance + random-input builder (see convolution.bench_case)."""
+    uf = Stereo(w=w, h=h, nd=nd)
+
+    def inputs(rng, frames=None):
+        shape = (h, w) if frames is None else (frames, h, w)
+        left = rng.randint(0, 256, shape).astype(np.int64)
+        right = np.roll(left, 3, axis=-1)
+        return {"stereo.in": (left, right)}
+
+    return uf, inputs
+
+
 def golden_stereo(left: np.ndarray, right: np.ndarray, nd: int = ND
                   ) -> np.ndarray:
     h, w = left.shape

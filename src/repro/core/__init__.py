@@ -8,6 +8,7 @@ Public surface:
   schedule — trace model F_L(t), burst fitting (§4.2-4.3)
   buffers  — FIFO allocation via register minimization, Z3/LP (§4.2)
   mapper   — local meets-or-exceeds mapping + conversions (§5)
+  lower    — automatic HWImg -> JAX/Pallas lowering (software §5.2 analog)
   compile  — end-to-end compile driver
 """
 from .compile import HWDesign, compile_pipeline  # noqa: F401
@@ -19,3 +20,11 @@ from .hwimg import (Abs, AbsDiff, Add, AddAsync, AddMSBs, And, ArgMin,  # noqa
                     Gt, Input, Map, Max, Min, Mul, Pad, PointFn, Reduce,
                     ReducePatch, RemoveMSBs, Replicate, Rshift, SparseTake,
                     Stack, Stencil, Sub, ToFloat, UserFunction, Upsample, Val)
+
+
+def __getattr__(name):
+    # lazy: lower.py imports jax; numpy-only flows shouldn't pay for it
+    if name in ("LoweredPipeline", "lower_pipeline", "LOWERERS"):
+        from . import lower
+        return getattr(lower, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -42,6 +42,8 @@ class HWDesign:
     in_val: Val
     out_val: Val
     notes: List[str] = field(default_factory=list)
+    backend: str = "numpy"            # default run() backend
+    _lowered: Dict[str, Any] = field(default_factory=dict, repr=False)
 
     # ---- reports ----
     @property
@@ -97,9 +99,48 @@ class HWDesign:
                 ok = False
         return ok
 
-    def run(self, inputs: Dict[str, np.ndarray]):
-        """Bit-accurate execution (Verilator analog)."""
-        return evaluate(self.out_val, inputs)
+    def lower(self, backend: Optional[str] = None):
+        """The jnp/Pallas executable for this design (cached per backend);
+        its ``notes`` list is the lowering report (kernel dispatches)."""
+        b = backend or self.backend
+        if b not in self._lowered:
+            from .lower import lower_pipeline  # lazy: numpy-only flows stay jax-free
+            lp = lower_pipeline(self.out_val, backend=b)
+            self._lowered[b] = lp
+            self.notes.extend(lp.notes)
+        return self._lowered[b]
+
+    def run(self, inputs: Dict[str, np.ndarray], backend: Optional[str] = None):
+        """Bit-accurate execution (Verilator analog). ``backend`` (or the
+        design's compile-time ``backend=``) selects the engine: "numpy" is
+        the reference executor; "jax"/"pallas" route through the automatic
+        lowering (lower.py) and are bit-identical to it."""
+        b = backend or self.backend
+        if b == "numpy":
+            return evaluate(self.out_val, inputs)
+        return self.lower(b)(inputs)
+
+    def run_batch(self, inputs: Dict[str, np.ndarray],
+                  backend: Optional[str] = None):
+        """Batched (vmap-over-frames) execution: every input carries a
+        leading frame axis. The numpy backend loops frames; jax/pallas
+        vmap the lowered pipeline."""
+        b = backend or self.backend
+        if b != "numpy":
+            return self.lower(b).run_batch(inputs)
+
+        def frame(i):
+            one = {k: tuple(e[i] for e in val) if isinstance(val, tuple)
+                   else val[i] for k, val in inputs.items()}
+            return evaluate(self.out_val, one)
+
+        n = next(e[0].shape[0] if isinstance(e, tuple) else e.shape[0]
+                 for e in inputs.values())
+        outs = [frame(i) for i in range(n)]
+        if isinstance(outs[0], tuple):
+            return tuple(np.stack([o[j] for o in outs])
+                         for j in range(len(outs[0])))
+        return np.stack(outs)
 
     def report(self) -> str:
         r = self.resources
@@ -120,6 +161,7 @@ def compile_pipeline(uf: UserFunction, T: Fraction = Fraction(1),
                      fifo_solver: str = "z3",
                      include_burst: bool = True,
                      manual_fifo_overrides: Optional[Dict[str, int]] = None,
+                     backend: str = "numpy",
                      ) -> HWDesign:
     """The full HWTool flow for one pipeline at target throughput T.
 
@@ -127,7 +169,12 @@ def compile_pipeline(uf: UserFunction, T: Fraction = Fraction(1),
     ``include_burst=False`` + overrides reproduce *manual* FIFO allocation
     (paper §7.2/§7.3): the user zeroes burst slack on modules whose bursts
     are absorbed elsewhere (e.g. pad/crop backed by AXI DMA).
+    ``backend``: default execution engine for HWDesign.run —
+    "numpy" (reference executor), "jax" (automatic jnp lowering), or
+    "pallas" (jnp lowering + fused dispatch to the resident Pallas kernels).
     """
+    if backend not in ("numpy", "jax", "pallas"):
+        raise ValueError(f"unknown backend {backend!r}")
     T = Fraction(T)
     inp, out = uf.build()
     kind = solve_interface(out)
@@ -257,4 +304,5 @@ def compile_pipeline(uf: UserFunction, T: Fraction = Fraction(1),
                      f"effective T={float(T_eff):.4g} (max ratio "
                      f"{float(max_ratio):.5g})")
     return HWDesign(uf.name, T_eff, kind, modules, edges, fifo, out_mod,
-                    out_sched.tokens_per_frame, inp, out, notes)
+                    out_sched.tokens_per_frame, inp, out, notes,
+                    backend=backend)

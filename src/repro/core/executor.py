@@ -15,7 +15,7 @@ from typing import Any, Dict
 import numpy as np
 
 from .dtypes import ArrayT, SparseT, TupleT, mask_to_width
-from .hwimg import Val, scalar_of, toposort, type_shape
+from .hwimg import Val, map_operand_reshapes, scalar_of, toposort
 
 
 def _np_stencil(p, x: np.ndarray) -> np.ndarray:
@@ -37,8 +37,12 @@ def _np_stencil(p, x: np.ndarray) -> np.ndarray:
 
 def _map_args(v: Val, ins):
     """Broadcast-align map operands: scalars/smaller arrays broadcast against
-    the deepest-nested operand (numpy trailing-dim broadcasting)."""
-    return [i for i in ins]
+    the deepest-nested operand. Operands matching the *outer* levels of the
+    output type (a per-pixel image combined with per-pixel patches) get
+    trailing singleton axes; inner-level operands (coefficient arrays) are
+    already handled by numpy's right-aligned broadcasting."""
+    return [i if plan is None else np.asarray(i).reshape(plan)
+            for i, plan in zip(ins, map_operand_reshapes(v))]
 
 
 def _apply_scalar_fn(fn, args):
@@ -78,10 +82,7 @@ def evaluate(out: Val, inputs: Dict[str, np.ndarray]) -> Any:
         elif name == "Reduce":
             fn = p["fn"]
             x = ins[0]
-            in_ty = v.inputs[0].ty
             # reduce the innermost array level: last two type axes
-            n_inner_axes = 2
-            inner_shape = type_shape(in_ty)[-2:]
             flat = x.reshape(x.shape[:-2] + (-1,))
             acc = flat[..., 0]
             for i in range(1, flat.shape[-1]):

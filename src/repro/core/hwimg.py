@@ -205,6 +205,42 @@ def scalar_count(t: DType) -> int:
     return n
 
 
+def map_operand_reshapes(v: Val) -> list:
+    """Broadcast alignment for Map operands of unequal nesting depth.
+
+    Returns, per operand, either None (numpy's right-aligned trailing-dim
+    broadcasting already does the right thing — e.g. an (kh, kw) coefficient
+    array against (h, w, kh, kw) stencil patches) or the reshape target that
+    right-aligns it by *type structure*: an operand whose array dims match
+    the *outer* levels of the output (e.g. a per-pixel (h, w) image combined
+    with (h, w, sh, sw) patches) gets trailing singleton axes appended so it
+    broadcasts across the inner levels.
+    """
+    out_shape = type_shape(v.ty)
+    plans = []
+    for i in v.inputs:
+        s = type_shape(i.ty)
+        k = len(s)
+        if k == 0 or k >= len(out_shape):
+            plans.append(None)          # scalar / full depth
+            continue
+        suffix = s == out_shape[len(out_shape) - k:]
+        prefix = s == out_shape[:k]
+        if suffix and prefix:
+            # e.g. an (n, n) operand against (n, n, n, n) patches: inner
+            # (coefficient) and outer (per-pixel) alignment both fit but
+            # mean different things — refuse to guess
+            raise TypeError(
+                f"ambiguous Map broadcast: operand {i.ty!r} aligns with "
+                f"both the outer and inner levels of {v.ty!r}; lift it "
+                f"explicitly (e.g. Replicate) to disambiguate")
+        if prefix:
+            plans.append(s + (1,) * (len(out_shape) - k))
+        else:
+            plans.append(None)          # numpy suffix broadcast, or no
+    return plans                        # alignment (op raises naturally)
+
+
 def inner_reduce_type(t: DType, out_scalar: DType) -> DType:
     """Type of reducing the innermost array level of t."""
     if isinstance(t, ArrayT) and isinstance(t.elem, ArrayT):
@@ -247,7 +283,9 @@ class OpDef:
 def _infer_map(params, *ts: DType) -> DType:
     fn: PointFn = params["fn"]
     arrs = [t for t in ts if isinstance(t, ArrayT)]
-    base = arrs[0] if arrs else ts[0]
+    # the deepest-nested operand fixes the output structure; shallower
+    # operands broadcast through it (ties: first operand wins)
+    base = max(arrs, key=lambda t: len(type_shape(t))) if arrs else ts[0]
     out_scalar = fn.out_type(*[scalar_of(t) for t in ts])
     return with_scalar(base, out_scalar)
 

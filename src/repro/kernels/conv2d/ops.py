@@ -31,3 +31,21 @@ def conv2d_stencil(p, k, shift: int = 11):
     out = conv2d_strips(p2, k, kh=kh, kw=kw, w_out=w, shift=shift,
                         interpret=INTERPRET)
     return out[:h]
+
+
+def conv2d_hwimg_site(x, k, *, l: int, b: int, shift: int):
+    """HWImg-site adapter (registry fusion ``conv2d``): implements the fused
+    Stencil(l,r,b,t) -> Map(Mul)(., Const(k)) -> Reduce(Add) -> Rshift ->
+    RemoveMSBs(->u8) subgraph on an (h, w) image.
+
+    The stencil's arbitrary window offsets are realized by zero-fill
+    pre-shifting (executor._np_stencil semantics), then the row-strip Pallas
+    kernel runs its 0..kh-1 / 0..kw-1 tap loops on the shifted image.
+    """
+    from ..util import shift2d
+    x = jnp.asarray(x, jnp.int32)
+    k = jnp.asarray(k, jnp.int32)
+    kh, kw = k.shape
+    h, w = x.shape
+    p = shift2d(x, b, l, h + kh - 1, w + kw - 1)
+    return conv2d_stencil(p, k, shift=shift)

@@ -1,0 +1,61 @@
+"""Operator-to-kernel registry: the resident optimized kernels addressable
+by the automatic lowering pass (core/lower.py).
+
+This is the software analog of the paper's library of hand-optimized Rigel2
+hardware generators (§5.2): the lowering pass mapper recognizes an HWImg
+subgraph ("fused_ops" chain) at a site and dispatches it to the registered
+Pallas implementation, exactly as HWTool's local mapping dispatches each
+operator site to a meets-or-exceeds generator instance. Every entry carries
+its pure-jnp oracle so equivalence stays testable kernel-by-kernel.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Dict, Optional, Tuple
+
+
+@dataclass(frozen=True)
+class KernelEntry:
+    name: str
+    fused_ops: Tuple[str, ...]      # HWImg op chain the kernel implements
+    pallas_fn: Callable             # Pallas-backed entry point
+    ref_fn: Callable                # pure-jnp oracle (bit/allclose-exact)
+    site_fn: Optional[Callable] = None  # HWImg-site adapter used by lower.py
+    description: str = ""
+
+
+KERNELS: Dict[str, KernelEntry] = {}
+
+
+def register_kernel(entry: KernelEntry) -> KernelEntry:
+    KERNELS[entry.name] = entry
+    return entry
+
+
+def get_kernel(name: str) -> KernelEntry:
+    return KERNELS[name]
+
+
+def _register_resident() -> None:
+    from .conv2d.ops import conv2d_hwimg_site, conv2d_stencil
+    from .conv2d.ref import conv2d_ref
+    from .flash.ops import flash_attention_tpu
+    from .flash.ref import attention_ref
+    from .sad.ops import sad_disparity, sad_hwimg_site
+    from .sad.ref import sad_ref
+
+    register_kernel(KernelEntry(
+        "conv2d", ("Stencil", "Map:Mul", "Reduce:Add"),
+        conv2d_stencil, conv2d_ref, site_fn=conv2d_hwimg_site,
+        description="row-strip stencil convolution (CONVOLUTION, fig. 1)"))
+    register_kernel(KernelEntry(
+        "sad", ("Stencil", "Map:AbsDiff", "ReducePatch:Add", "ArgMin"),
+        sad_disparity, sad_ref, site_fn=sad_hwimg_site,
+        description="SAD block-matching disparity (STEREO, fig. 9)"))
+    register_kernel(KernelEntry(
+        "flash_attention", (),
+        flash_attention_tpu, attention_ref,
+        description="flash attention (serving workloads; no HWImg pattern)"))
+
+
+_register_resident()

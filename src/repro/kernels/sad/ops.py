@@ -25,3 +25,23 @@ def sad_disparity(l, r, *, nd: int = 64, bh: int = 8, bw: int = 8):
     out = sad_strips(l, r, nd=nd, bh=bh, bw=bw, w_out=w,
                      interpret=INTERPRET)
     return out[:h]
+
+
+def sad_hwimg_site(left, right, *, nd: int, bh: int, bw: int):
+    """HWImg-site adapter (registry fusion ``sad``): implements the fused
+    Stencil(-(nd-1),0,0,0) -> Map(AbsDiff)(Replicate(left), .) ->
+    Stencil(-(bw-1),0,-(bh-1),0) -> ReducePatch(Add) -> ArgMin subgraph on
+    an (h, w) image pair (trailing-window STEREO form).
+
+    Both images are placed at row offset bh-1 / column offset nd-1+bw-1 in
+    zero-extended planes, which makes the kernel's tap reads reproduce the
+    executor's per-level zero-fill exactly (out-of-range candidate reads
+    hit zeros, out-of-range patch taps read |0-0|).
+    """
+    left = jnp.asarray(left, jnp.int32)
+    right = jnp.asarray(right, jnp.int32)
+    h, w = left.shape
+    shape = (h + bh - 1, w + bw - 1 + nd - 1)
+    L = jnp.zeros(shape, jnp.int32).at[bh - 1:, nd - 1 + bw - 1:].set(left)
+    R = jnp.zeros(shape, jnp.int32).at[bh - 1:, nd - 1 + bw - 1:].set(right)
+    return sad_disparity(L, R, nd=nd, bh=bh, bw=bw)

@@ -1,0 +1,21 @@
+"""Shared helpers for HWImg-site kernel adapters."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def shift2d(x: jnp.ndarray, top: int, left: int, oh: int, ow: int
+            ) -> jnp.ndarray:
+    """out[i, j] = x[i + top, j + left], zero-filled outside x.
+
+    This is the zero-fill placement of executor._np_stencil: a stencil tap
+    at window offset (dy, dx) of a Stencil(l, r, b, t) site reads
+    x[y + b + dy, x + l + dx], so a pre-shifted image with top=b, left=l
+    turns arbitrary window offsets into the kernels' 0..k-1 tap loops.
+    """
+    h, w = x.shape[:2]
+    pt, pl = max(0, -top), max(0, -left)
+    pb = max(0, top + oh - h)
+    pr = max(0, left + ow - w)
+    xp = jnp.pad(x, ((pt, pb), (pl, pr)) + ((0, 0),) * (x.ndim - 2))
+    return xp[top + pt:top + pt + oh, left + pl:left + pl + ow]

@@ -1,0 +1,43 @@
+"""Shared tier-1 fixtures and session-level speedups.
+
+- Repo-local persistent XLA compilation cache: repeated tier-1 runs skip
+  recompiling the heavy per-arch model tests (REPRO_NO_JAX_CACHE=1
+  disables). Must be configured via env vars before jax is imported, and
+  propagates to the subprocess tests in test_perf_variants.
+- Session-scoped compiled designs shared across test modules, so the
+  full-size CONVOLUTION pipeline and the four small app cases are each
+  compiled once.
+"""
+import os
+from fractions import Fraction
+
+import pytest
+
+if not os.environ.get("REPRO_NO_JAX_CACHE"):
+    _cache = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), ".cache", "jax")
+    os.makedirs(_cache, exist_ok=True)
+    os.environ.setdefault("JAX_COMPILATION_CACHE_DIR", _cache)
+    os.environ.setdefault("JAX_PERSISTENT_CACHE_MIN_ENTRY_SIZE_BYTES", "-1")
+    os.environ.setdefault("JAX_PERSISTENT_CACHE_MIN_COMPILE_TIME_SECS", "0.1")
+
+
+@pytest.fixture(scope="session")
+def conv_design_t1():
+    """Full-size CONVOLUTION compiled at T=1 (shared by the system tests)."""
+    from repro.apps import Convolution
+    from repro.core import compile_pipeline
+    return compile_pipeline(Convolution(), T=Fraction(1))
+
+
+@pytest.fixture(scope="session")
+def lowering_cases():
+    """{app: (compiled HWDesign, inputs_fn)} for the paper's four apps at
+    small sizes — the shared substrate of the cross-backend suite."""
+    from repro.apps import BENCH_CASES
+    from repro.core import compile_pipeline
+    cases = {}
+    for name, case in BENCH_CASES.items():
+        uf, inputs_fn = case()
+        cases[name] = (compile_pipeline(uf), inputs_fn)
+    return cases

@@ -36,6 +36,35 @@ def test_flow_golden():
     assert np.allclose(v, gv, rtol=1e-6)
 
 
+def test_map_broadcast_unequal_depth():
+    """Regression: Map operands of unequal nesting depth must right-align
+    by *type structure* — a per-pixel (h, w) image combined with per-pixel
+    (h, w, sh, sw) patches broadcasts across the patch axes (the seed
+    executor's _map_args was a no-op and crashed here)."""
+    from repro.core import Array2d, Input, Map, Stencil, UInt
+    from repro.core.hwimg import Add
+    img = rng.randint(0, 256, (6, 8)).astype(np.int64)
+    inp = Input(Array2d(UInt(8), 8, 6), "x")
+    st = Stencil(-1, 0, -1, 0)(inp)               # (6, 8, 2, 2)
+    ext = np.zeros((7, 9), dtype=np.int64)
+    ext[1:, 1:] = img
+    ref = np.empty((6, 8, 2, 2), dtype=np.int64)
+    for dy in range(2):
+        for dx in range(2):
+            ref[:, :, dy, dx] = ext[dy:dy + 6, dx:dx + 8] + img
+    ref &= 0xFF                                   # Add out type u8 wraps
+    for val in (Map(Add)(st, inp), Map(Add)(inp, st)):   # both orders
+        assert val.ty == st.ty                    # deepest operand wins
+        assert np.array_equal(evaluate(val, {"x": img}), ref)
+
+    # ambiguous case: a (2, 2) image against (2, 2, 2, 2) patches fits
+    # both the outer and inner levels — must refuse, not silently guess
+    inp2 = Input(Array2d(UInt(8), 2, 2), "y")
+    amb = Map(Add)(Stencil(-1, 0, -1, 0)(inp2), inp2)
+    with pytest.raises(TypeError, match="ambiguous"):
+        evaluate(amb, {"y": img[:2, :2]})
+
+
 def test_descriptor_golden():
     de = Descriptor(w=64, h=48, n_features=32)
     img = rng.randint(0, 256, (48, 64)).astype(np.int64)

@@ -1,0 +1,144 @@
+"""Cross-backend equivalence suite: the automatic HWImg->JAX lowering
+(core/lower.py) must be *bit-identical* to the numpy reference executor on
+every backend — "jax" (generic jnp) and "pallas" (generic jnp + fused
+dispatch to the resident Pallas kernels) — for the paper's four apps and
+for randomized DAGs over the point-op vocabulary."""
+import numpy as np
+import pytest
+
+from repro.core import (AddAsync, AddMSBs, Array2d, Const, Map, Mul, Crop,
+                        Downsample, Input, Pad, Reduce, RemoveMSBs, Rshift,
+                        Stencil, UInt, Upsample)
+from repro.core.executor import evaluate
+from repro.core.hwimg import (Abs, AbsDiff, Add, Max, Min, Sub, scalar_of)
+from repro.core.lower import lower_pipeline
+
+APPS = ["convolution", "stereo", "flow", "descriptor"]
+BACKENDS = ["jax", "pallas"]
+
+rng_global = np.random.RandomState(11)
+
+
+def _eq(a, b):
+    if isinstance(a, tuple):
+        return len(a) == len(b) and all(_eq(x, y) for x, y in zip(a, b))
+    return np.array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("app", APPS)
+def test_apps_cross_backend_bit_exact(app, backend, lowering_cases):
+    design, inputs_fn = lowering_cases[app]
+    inp = inputs_fn(np.random.RandomState(11))
+    assert _eq(design.run(inp), design.run(inp, backend=backend))
+
+
+def test_conv2d_fusion_dispatches_to_pallas_kernel(lowering_cases):
+    design, _ = lowering_cases["convolution"]
+    lp = design.lower("pallas")
+    assert any("kernels/conv2d" in n for n in lp.notes), lp.notes
+    assert len(lp.fusions) == 1
+    assert any("kernels/conv2d" in n for n in design.notes)  # report
+
+
+def test_sad_fusion_dispatches_to_pallas_kernel(lowering_cases):
+    design, _ = lowering_cases["stereo"]
+    lp = design.lower("pallas")
+    assert any("kernels/sad" in n for n in lp.notes), lp.notes
+    assert len(lp.fusions) == 1
+
+
+@pytest.mark.parametrize("app", ["flow", "descriptor"])
+def test_float_apps_take_generic_lowering(app, lowering_cases):
+    """No pattern in FLOW/DESCRIPTOR meets the fusion exactness guards."""
+    design, _ = lowering_cases[app]
+    assert not design.lower("pallas").fusions
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("app", ["convolution", "stereo"])
+def test_run_batch_matches_per_frame(app, backend, lowering_cases):
+    """vmap-over-frames (the throughput entry point) == per-frame loop."""
+    design, inputs_fn = lowering_cases[app]
+    batch = inputs_fn(np.random.RandomState(3), frames=3)
+    assert _eq(design.run_batch(batch), design.run_batch(batch, backend=backend))
+
+
+def test_unsafe_conv_chain_is_not_fused_but_stays_exact():
+    """A conv chain whose u16 accumulator wraps fails the exactness guard:
+    the matcher must fall back to the generic lowering and still match the
+    executor bit-for-bit."""
+    rng = np.random.RandomState(5)
+    inp = Input(Array2d(UInt(8), 24, 16), "x")
+    k = rng.randint(0, 256, (8, 8)).astype(np.int64)
+    st = Stencil(-7, 0, -7, 0)(inp)
+    prod = Map(Mul)(st, Const(Array2d(UInt(8), 8, 8), k))  # u16 products
+    s = Reduce(AddAsync)(prod)                             # u16 acc: wraps!
+    out = Map(RemoveMSBs(8))(Map(Rshift(3))(s))
+    lp = lower_pipeline(out, backend="pallas")
+    assert not lp.fusions
+    x = rng.randint(0, 256, (16, 24)).astype(np.int64)
+    assert _eq(evaluate(out, {"x": x}), lp({"x": x}))
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_structural_ops_cross_backend(backend):
+    """Pad / centered Stencil / Crop / Downsample / Upsample — the
+    geometry ops, in a shape the fusion matchers must not claim."""
+    rng = np.random.RandomState(9)
+    inp = Input(Array2d(UInt(8), 16, 12), "x")
+    k = rng.randint(0, 16, (3, 3)).astype(np.int64)
+    g = Pad(2, 1, 1, 2)(inp)
+    st = Stencil(-1, 1, -1, 1)(g)          # centered window
+    prod = Map(Mul)(st, Const(Array2d(UInt(8), 3, 3), k))
+    s = Reduce(AddAsync)(Map(AddMSBs(8))(prod))
+    c = Crop(1, 1, 1, 1)(s)
+    out = Upsample(2, 2)(Downsample(2, 2)(c))
+    lp = lower_pipeline(out, backend=backend)
+    x = rng.randint(0, 256, (12, 16)).astype(np.int64)
+    assert _eq(evaluate(out, {"x": x}), lp({"x": x}))
+
+
+# ---- property-style randomized DAGs over the point-op vocabulary ----
+
+_BINARY = [Add, Sub, Mul, Max, Min, AbsDiff]
+
+
+def _random_pointop_dag(rng, n_inputs=2, h=6, w=9):
+    vals = [Input(Array2d(UInt(8), w, h), f"in{i}") for i in range(n_inputs)]
+    for _ in range(rng.randint(4, 10)):
+        if rng.rand() < 0.6:
+            a, b = (vals[rng.randint(len(vals))] for _ in range(2))
+            fn = _BINARY[rng.randint(len(_BINARY))]
+            if fn is Mul and (scalar_of(a.ty).bits()
+                              + scalar_of(b.ty).bits()) > 40:
+                continue                  # keep carriers inside int64
+            vals.append(Map(fn)(a, b))
+        else:
+            a = vals[rng.randint(len(vals))]
+            bits = scalar_of(a.ty).bits()
+            kind = rng.randint(4)
+            if kind == 0:
+                fn = Abs
+            elif kind == 1:
+                fn = Rshift(int(rng.randint(0, 5)))
+            elif kind == 2 and bits < 40:
+                fn = AddMSBs(int(rng.randint(1, 5)))
+            elif bits > 2:
+                fn = RemoveMSBs(int(rng.randint(1, bits - 1)))
+            else:
+                continue
+            vals.append(Map(fn)(a))
+    return vals[-1], n_inputs, h, w
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_random_pointop_dags_cross_backend(seed):
+    rng = np.random.RandomState(100 + seed)
+    out, n_inputs, h, w = _random_pointop_dag(rng)
+    inputs = {f"in{i}": rng.randint(0, 256, (h, w)).astype(np.int64)
+              for i in range(n_inputs)}
+    ref = evaluate(out, inputs)
+    for backend in BACKENDS:
+        assert _eq(ref, lower_pipeline(out, backend=backend)(inputs)), \
+            (seed, backend)

@@ -1,9 +1,11 @@
 """Property tests (hypothesis) for the paper's two solvers: FIFO register
 minimization (§4.2) and the schedule-trace burst fit (§4.3)."""
 import numpy as np
+import pytest
 from fractions import Fraction
 
-from hypothesis import given, settings, strategies as st
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import buffers as buf
 from repro.core import schedule as sched

@@ -22,8 +22,9 @@ PAPER_CONV = {
 
 
 @pytest.mark.parametrize("T", sorted(PAPER_CONV))
-def test_convolution_matches_paper_fig9(T):
-    d = compile_pipeline(Convolution(), T=T)
+def test_convolution_matches_paper_fig9(T, conv_design_t1):
+    d = conv_design_t1 if T == Fraction(1) else compile_pipeline(
+        Convolution(), T=T)
     t_eff, cycles = PAPER_CONV[T]
     # throughput normalization reproduces the paper's T column (which is
     # rounded to 2-3 significant digits; 7.8755 vs printed 7.87)
@@ -33,20 +34,19 @@ def test_convolution_matches_paper_fig9(T):
     assert d.check_schedule()
 
 
-def test_conv_resource_scaling_near_linear():
+def test_conv_resource_scaling_near_linear(conv_design_t1):
     """Paper fig. 10: compute resources scale ~linearly with T."""
-    clbs = {}
-    for T in [Fraction(1), Fraction(4)]:
-        clbs[T] = compile_pipeline(Convolution(), T=T).resources.clbs
-    ratio = clbs[Fraction(4)] / clbs[Fraction(1)]
+    clbs_1 = conv_design_t1.resources.clbs
+    clbs_4 = compile_pipeline(Convolution(), T=Fraction(4)).resources.clbs
+    ratio = clbs_4 / clbs_1
     assert 3.0 < ratio < 5.0, ratio
 
 
-def test_auto_fifo_overhead_vs_manual():
+def test_auto_fifo_overhead_vs_manual(conv_design_t1):
     """Paper §7.3 / fig. 11: automatic FIFO allocation costs BRAM vs the
     manual allocation (DMA absorbs pad/crop bursts); compute cost is the
     same."""
-    auto = compile_pipeline(Convolution(), T=Fraction(1))
+    auto = conv_design_t1
     manual = compile_pipeline(Convolution(), T=Fraction(1),
                               manual_fifo_overrides={"crop": 0, "pad": 0})
     assert auto.resources.brams > manual.resources.brams
@@ -70,8 +70,9 @@ def test_stereo_static_interface():
     assert d.check_schedule()
 
 
-def test_solver_modes_agree():
-    """Z3 and LP both solve register minimization exactly -> equal totals."""
-    a = compile_pipeline(Convolution(), T=Fraction(1), fifo_solver="z3")
+def test_solver_modes_agree(conv_design_t1):
+    """Z3 and LP both solve register minimization exactly -> equal totals.
+    (conv_design_t1 compiled with the default "z3" solver, which falls
+    back to the exact LP when z3-solver is not installed.)"""
     b = compile_pipeline(Convolution(), T=Fraction(1), fifo_solver="lp")
-    assert a.fifo.total_bits == b.fifo.total_bits
+    assert conv_design_t1.fifo.total_bits == b.fifo.total_bits
