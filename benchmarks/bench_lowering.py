@@ -1,8 +1,11 @@
-"""Backend wall-time benchmark: numpy executor vs automatic jnp lowering
-(vs Pallas fused dispatch, interpret mode) for the paper's four apps.
+"""Backend wall-time benchmark: numpy executor vs the lowering compiler
+(jax = jnp lowering + jnp-level fusions, pallas = + fused Pallas-kernel
+dispatch in interpret mode) for the paper's four apps plus PYRAMID.
 
-``write_json`` emits BENCH_kernels.json so the bench trajectory carries the
-numpy-vs-lowered numbers per app alongside the CSV rows.
+Cold (first call: trace + XLA compile) and warm (steady-state) timings are
+measured separately so jit compile time does not pollute the perf
+trajectory; ``write_json`` emits both, plus per-backend fusion counts,
+into BENCH_kernels.json.
 """
 from __future__ import annotations
 
@@ -16,15 +19,21 @@ SIZES = {
     "stereo": dict(w=96, h=32, nd=16),
     "flow": dict(w=96, h=48),
     "descriptor": dict(w=96, h=64, n_features=64),
+    "pyramid": dict(w=192, h=96),
 }
 
+WARM_ITERS = 10
 
-def _time_us(f, n=3):
-    f()                                   # warm (trace/jit/lower)
+
+def _time_cold_warm(f, n=WARM_ITERS):
+    t0 = time.perf_counter()
+    f()                                   # first call: trace + compile
+    cold = (time.perf_counter() - t0) * 1e6
     t0 = time.perf_counter()
     for _ in range(n):
         f()
-    return (time.perf_counter() - t0) / n * 1e6
+    warm = (time.perf_counter() - t0) / n * 1e6
+    return round(cold), round(warm)
 
 
 _memo = None
@@ -44,11 +53,18 @@ def bench_backends():
         inp = inputs_fn(rng)
         row = {}
         for backend in ("numpy", "jax", "pallas"):
-            row[f"{backend}_us"] = round(
-                _time_us(lambda b=backend: design.run(inp, backend=b)))
-        row["fusions"] = len(design.lower("pallas").fusions)
+            cold, warm = _time_cold_warm(
+                lambda b=backend: design.run(inp, backend=b))
+            row[f"{backend}_cold_us"] = cold
+            row[f"{backend}_warm_us"] = warm
+            if backend != "numpy":
+                row[f"fusions_{backend}"] = len(
+                    design.lower(backend).fusions)
+        row["fusions"] = row["fusions_pallas"]
         row["speedup_jax_vs_numpy"] = round(
-            row["numpy_us"] / max(1, row["jax_us"]), 3)
+            row["numpy_warm_us"] / max(1, row["jax_warm_us"]), 3)
+        row["speedup_pallas_vs_numpy"] = round(
+            row["numpy_warm_us"] / max(1, row["pallas_warm_us"]), 3)
         out[name] = row
     _memo = out
     return out
@@ -56,9 +72,11 @@ def bench_backends():
 
 def write_json(path: str = "BENCH_kernels.json") -> dict:
     data = {
-        "note": ("wall time per frame, CPU; jax = automatic jnp lowering "
-                 "(eager), pallas = + fused kernel dispatch in interpret "
-                 "mode"),
+        "note": ("wall time per frame, CPU; cold = first call (trace + XLA "
+                 "compile), warm = steady state over "
+                 f"{WARM_ITERS} iters; jax = lowering compiler (jnp fusions "
+                 "+ segmented whole-pipeline jit), pallas = + fused Pallas "
+                 "kernel dispatch in interpret mode"),
         "sizes": SIZES,
         "apps": bench_backends(),
     }
@@ -71,7 +89,9 @@ def write_json(path: str = "BENCH_kernels.json") -> dict:
 def run(csv_rows):
     for name, row in bench_backends().items():
         csv_rows.append((f"lowering_{name}",
-                         f"{row['jax_us']}",
-                         f"numpy_us={row['numpy_us']},"
+                         f"{row['jax_warm_us']}",
+                         f"numpy_us={row['numpy_warm_us']},"
+                         f"jax_cold_us={row['jax_cold_us']},"
+                         f"speedup={row['speedup_jax_vs_numpy']},"
                          f"fusions={row['fusions']}"))
     return csv_rows

@@ -1,6 +1,7 @@
 # One function per paper table. Print ``name,us_per_call,derived`` CSV.
 # ``--json`` additionally writes BENCH_kernels.json (numpy executor vs
-# lowered-jax wall time per app, benchmarks/bench_lowering.py).
+# lowering-compiler backends, cold vs warm, per-backend fusion counts —
+# benchmarks/bench_lowering.py).
 from __future__ import annotations
 
 import argparse

@@ -1,24 +1,29 @@
-"""The paper's four evaluation pipelines (§7), written in HWImg."""
-from .convolution import Convolution, golden_convolution  # noqa: F401
+"""The paper's four evaluation pipelines (§7) plus repo-grown workloads,
+written in HWImg."""
+from .convolution import (Convolution, golden_convolution,  # noqa: F401
+                          separable_kernel)
 from .stereo import Stereo, golden_stereo  # noqa: F401
 from .flow import Flow, golden_flow  # noqa: F401
 from .descriptor import Descriptor, golden_descriptor  # noqa: F401
+from .pyramid import Pyramid, golden_pyramid  # noqa: F401
 
 PIPELINES = {
     "convolution": Convolution,
     "stereo": Stereo,
     "flow": Flow,
     "descriptor": Descriptor,
+    "pyramid": Pyramid,
 }
 
 # uniform (UserFunction, inputs_fn) small cases for cross-backend tests
 # and benchmarks
 from . import convolution as _conv, descriptor as _desc  # noqa: E402
-from . import flow as _flow, stereo as _stereo  # noqa: E402
+from . import flow as _flow, pyramid as _pyr, stereo as _stereo  # noqa: E402
 
 BENCH_CASES = {
     "convolution": _conv.bench_case,
     "stereo": _stereo.bench_case,
     "flow": _flow.bench_case,
     "descriptor": _desc.bench_case,
+    "pyramid": _pyr.bench_case,
 }

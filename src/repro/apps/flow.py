@@ -8,9 +8,9 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.core import (AddAsync, AddMSBs, Array2d, Concat, Const, Float,
-                        FloatDiv, FloatMul, FloatSub, Int, Map, Mul, Reduce,
-                        Stencil, Sub, ToFloat, TupleT, UInt, UserFunction)
+from repro.core import (AddAsync, AddMSBs, Array2d, Concat, Const, FloatDiv,
+                        FloatMul, FloatSub, Int, Map, Mul, Reduce, Stencil,
+                        Sub, ToFloat, TupleT, UInt, UserFunction)
 
 W, H = 1920, 1080
 WIN = 8

@@ -6,7 +6,7 @@ ever lowered via ShapeDtypeStructs (no allocation).
 """
 from __future__ import annotations
 
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Tuple
 
 from repro.models.config import ModelConfig
 

@@ -12,7 +12,6 @@ cycle-count report, and a bit-accurate executable (executor.py).
 """
 from __future__ import annotations
 
-import math
 from dataclasses import dataclass, field
 from fractions import Fraction
 from typing import Any, Dict, List, Optional, Tuple
@@ -25,7 +24,7 @@ from .executor import evaluate
 from .hwimg import UserFunction, Val, toposort
 from .mapper import (MAPPERS, WIRING_OPS, Site, make_converter, make_fanout,
                      solve_interface, solve_rates)
-from .rigel import (Interface, Resources, RModule, STATIC, STREAM,
+from .rigel import (Resources, RModule, STATIC, STREAM,
                     fifo_resources)
 
 
@@ -99,22 +98,27 @@ class HWDesign:
                 ok = False
         return ok
 
-    def lower(self, backend: Optional[str] = None):
-        """The jnp/Pallas executable for this design (cached per backend);
-        its ``notes`` list is the lowering report (kernel dispatches)."""
+    def lower(self, backend: Optional[str] = None, debug: bool = False):
+        """The lowering-compiler executable for this design (cached per
+        backend): explicit IR -> rewrite rules -> whole-pipeline jit
+        (core/lowering/).  ``debug=True`` keeps the eager per-node path
+        for node-level diffing.  ``notes``/``lowering_report()`` carry the
+        fused-dispatch notes and jit cache stats."""
         b = backend or self.backend
-        if b not in self._lowered:
-            from .lower import lower_pipeline  # lazy: numpy-only flows stay jax-free
-            lp = lower_pipeline(self.out_val, backend=b)
-            self._lowered[b] = lp
+        key = (b, debug)
+        if key not in self._lowered:
+            # lazy import: numpy-only flows stay jax-free
+            from .lowering import lower_pipeline
+            lp = lower_pipeline(self.out_val, backend=b, debug=debug)
+            self._lowered[key] = lp
             self.notes.extend(lp.notes)
-        return self._lowered[b]
+        return self._lowered[key]
 
     def run(self, inputs: Dict[str, np.ndarray], backend: Optional[str] = None):
         """Bit-accurate execution (Verilator analog). ``backend`` (or the
         design's compile-time ``backend=``) selects the engine: "numpy" is
-        the reference executor; "jax"/"pallas" route through the automatic
-        lowering (lower.py) and are bit-identical to it."""
+        the reference executor; "jax"/"pallas" route through the lowering
+        compiler (core/lowering/) and are bit-identical to it."""
         b = backend or self.backend
         if b == "numpy":
             return evaluate(self.out_val, inputs)
@@ -142,6 +146,17 @@ class HWDesign:
                          for j in range(len(outs[0])))
         return np.stack(outs)
 
+    def lowering_report(self) -> str:
+        """Fused-dispatch notes and per-signature jit cache stats for every
+        instantiated lowering backend (empty until ``lower()``/``run`` with
+        a jax/pallas backend has been called)."""
+        lines: List[str] = []
+        for (b, debug), lp in sorted(self._lowered.items()):
+            tag = f"{b}+debug" if debug else b
+            lines.append(f" -- lowering backend={tag} --")
+            lines.extend(f"  {ln}" for ln in lp.report_lines())
+        return "\n".join(lines)
+
     def report(self) -> str:
         r = self.resources
         lines = [f"== {self.name}  T={float(self.T):.3g}px/cyc  {self.kind} "
@@ -154,6 +169,8 @@ class HWDesign:
         for i, m in enumerate(self.modules):
             s = self.fifo.start[i] if self.fifo else 0
             lines.append(f"  [{i:3d}] s={s:6d} {m!r}")
+        if self._lowered:
+            lines.append(self.lowering_report())
         return "\n".join(lines)
 
 

@@ -9,7 +9,6 @@ binary exponent (value = raw * 2**-exp).
 """
 from __future__ import annotations
 
-import dataclasses
 from dataclasses import dataclass
 from typing import Tuple as PyTuple
 

@@ -14,7 +14,7 @@ from typing import Any, Dict
 
 import numpy as np
 
-from .dtypes import ArrayT, SparseT, TupleT, mask_to_width
+from .dtypes import ArrayT, TupleT, mask_to_width
 from .hwimg import Val, map_operand_reshapes, scalar_of, toposort
 
 

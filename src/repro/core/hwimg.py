@@ -27,7 +27,7 @@ from typing import Any, Callable, Dict, Optional, Sequence, Tuple
 
 import numpy as np
 
-from .dtypes import (ArrayT, Bits, Bool, DType, Float, Int, SparseT, TupleT,
+from .dtypes import (ArrayT, Bool, DType, Float, Int, SparseT, TupleT,
                      UInt, is_integer, is_signed, narrow, widen)
 
 _counter = itertools.count()
@@ -205,7 +205,7 @@ def scalar_count(t: DType) -> int:
     return n
 
 
-def map_operand_reshapes(v: Val) -> list:
+def map_reshape_plans(out_ty: DType, in_tys: Sequence[DType]) -> list:
     """Broadcast alignment for Map operands of unequal nesting depth.
 
     Returns, per operand, either None (numpy's right-aligned trailing-dim
@@ -216,10 +216,10 @@ def map_operand_reshapes(v: Val) -> list:
     with (h, w, sh, sw) patches) gets trailing singleton axes appended so it
     broadcasts across the inner levels.
     """
-    out_shape = type_shape(v.ty)
+    out_shape = type_shape(out_ty)
     plans = []
-    for i in v.inputs:
-        s = type_shape(i.ty)
+    for ity in in_tys:
+        s = type_shape(ity)
         k = len(s)
         if k == 0 or k >= len(out_shape):
             plans.append(None)          # scalar / full depth
@@ -231,14 +231,19 @@ def map_operand_reshapes(v: Val) -> list:
             # (coefficient) and outer (per-pixel) alignment both fit but
             # mean different things — refuse to guess
             raise TypeError(
-                f"ambiguous Map broadcast: operand {i.ty!r} aligns with "
-                f"both the outer and inner levels of {v.ty!r}; lift it "
+                f"ambiguous Map broadcast: operand {ity!r} aligns with "
+                f"both the outer and inner levels of {out_ty!r}; lift it "
                 f"explicitly (e.g. Replicate) to disambiguate")
         if prefix:
             plans.append(s + (1,) * (len(out_shape) - k))
         else:
             plans.append(None)          # numpy suffix broadcast, or no
     return plans                        # alignment (op raises naturally)
+
+
+def map_operand_reshapes(v: Val) -> list:
+    """``map_reshape_plans`` over a Val node (executor entry point)."""
+    return map_reshape_plans(v.ty, [i.ty for i in v.inputs])
 
 
 def inner_reduce_type(t: DType, out_scalar: DType) -> DType:

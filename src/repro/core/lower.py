@@ -1,462 +1,15 @@
-"""Automatic HWImg -> JAX/Pallas lowering (the software-backend analog of
-mapper.py's local mapping, paper §5.2).
-
-mapper.py maps every operator site to a meets-or-exceeds Rigel2 hardware
-generator; this module maps every operator site to a jnp implementation
-(``LOWERERS``), with a pattern-matching pass that recognizes fused subgraphs
-and dispatches them to the resident optimized Pallas kernels registered in
-kernels/registry.py — exactly as the paper dispatches operator sites to
-optimized Rigel2 generators:
-
-    Stencil -> Map(Mul)(., Const) -> Reduce(Add) -> Rshift -> RemoveMSBs
-        => kernels/conv2d            (CONVOLUTION)
-    Stencil(1 x nd) -> Map(AbsDiff)(Replicate(left), .) -> Stencil(bh x bw)
-        -> ReducePatch(Add) -> ArgMin
-        => kernels/sad               (STEREO)
-
-A fusion is taken only when it is provably bit-exact against executor.py
-(unsigned operands, accumulators that cannot wrap in the executor's declared
-widths nor in the kernel's int32, trailing-window stencils); otherwise the
-site falls back to the generic jnp lowering, which is bit-exact by
-construction — the software "meets-or-exceeds" rule.
-
-Backends:
-    "jax"     generic jnp lowering of every node
-    "pallas"  generic lowering + fused-subgraph dispatch to Pallas kernels
-
-Both run under the x64 context so the integer carrier (int64) and hardware
-wrap masking match executor.py exactly.
+"""Back-compat shim: the automatic HWImg -> JAX/Pallas lowering now lives
+in the ``core/lowering/`` package (explicit IR -> declarative rewrite rules
+-> whole-pipeline jit engine).  Import from ``repro.core.lowering``; this
+module re-exports the public surface for one release.
 """
-from __future__ import annotations
-
-from collections import Counter
-from dataclasses import dataclass
-from typing import Any, Callable, Dict, List, Optional, Tuple
-
-import jax
-import jax.numpy as jnp
-import numpy as np
-from jax.experimental import enable_x64
-
-from .dtypes import (ArrayT, Bits, Float, Int, TupleT, UInt, mask_to_width)
-from .hwimg import (PointFn, Val, map_operand_reshapes, scalar_of, toposort,
-                    type_shape)
-
-
-# --------------------------------------------------------------------------
-# scalar function lowering: PointFn -> traceable jnp callable
-
-_JNP_FNS: Dict[str, Callable[[Dict[str, Any]], Callable]] = {
-    "Abs": lambda p: jnp.abs,
-    "AbsDiff": lambda p: (
-        lambda a, b: jnp.abs(a.astype(jnp.int64) - b.astype(jnp.int64))),
-    "Max": lambda p: jnp.maximum,
-    "Min": lambda p: jnp.minimum,
-    "And": lambda p: jnp.logical_and,
-    "FloatMul": lambda p: (
-        lambda a, b: (a.astype(jnp.float32)
-                      * b.astype(jnp.float32)).astype(jnp.float32)),
-    "FloatAdd": lambda p: (
-        lambda a, b: (a.astype(jnp.float32)
-                      + b.astype(jnp.float32)).astype(jnp.float32)),
-    "FloatSub": lambda p: (
-        lambda a, b: (a.astype(jnp.float32)
-                      - b.astype(jnp.float32)).astype(jnp.float32)),
-    "FloatDiv": lambda p: (
-        lambda a, b: jnp.where(
-            b != 0,
-            a.astype(jnp.float32) / jnp.where(b == 0, 1, b).astype(jnp.float32),
-            0).astype(jnp.float32)),
-    "FloatSqrt": lambda p: (
-        lambda a: jnp.sqrt(jnp.maximum(a.astype(jnp.float32),
-                                       0)).astype(jnp.float32)),
-}
-
-
-def jnp_point_fn(fn: PointFn) -> Callable:
-    """The jnp equivalent of fn.np_fn. PointFns written as dtype-generic
-    operator expressions (a + b, a >> n, a.astype) trace as-is; the ones
-    that call numpy ufuncs get explicit jnp replacements."""
-    if fn.name in _JNP_FNS:
-        return _JNP_FNS[fn.name](dict(fn.params))
-    return fn.np_fn
-
-
-# --------------------------------------------------------------------------
-# hardware wrap masking (the jnp mirror of executor._mask_result)
-
-def _jnp_mask(r, ty):
-    if isinstance(r, tuple):
-        if isinstance(ty, TupleT):
-            return tuple(_jnp_mask(x, t) for x, t in zip(r, ty.elems))
-        if isinstance(ty, ArrayT) and isinstance(ty.elem, TupleT):
-            return tuple(_jnp_mask(x, t) for x, t in zip(r, ty.elem.elems))
-        return r
-    s = scalar_of(ty)
-    if isinstance(s, (UInt, Bits)):
-        return jnp.asarray(r).astype(jnp.int64) & ((1 << s.bits()) - 1)
-    if isinstance(s, Int):
-        n = s.bits()
-        x = jnp.asarray(r).astype(jnp.int64) & ((1 << n) - 1)
-        return jnp.where(x >= (1 << (n - 1)), x - (1 << n), x)
-    return jnp.asarray(r)
-
-
-# --------------------------------------------------------------------------
-# generic per-operator lowerings (the LOWERERS table)
-
-def _jnp_stencil(p, x):
-    l, r, b, t = p["l"], p["r"], p["b"], p["t"]
-    sw, sh = abs(r - l) + 1, abs(t - b) + 1
-    h, w = x.shape[:2]
-    pl, pt_ = max(0, -min(l, 0)), max(0, -min(b, 0))
-    pr, pb_ = max(0, max(r + sw, sw)), max(0, max(t + sh, sh))
-    xp = jnp.zeros((h + pt_ + pb_, w + pl + pr) + x.shape[2:], x.dtype)
-    xp = xp.at[pt_:pt_ + h, pl:pl + w].set(x)
-    rows = []
-    for dy in range(sh):
-        cols = []
-        for dx in range(sw):
-            oy, ox = b + dy, l + dx
-            cols.append(xp[pt_ + oy:pt_ + oy + h, pl + ox:pl + ox + w])
-        rows.append(jnp.stack(cols, axis=2))
-    return jnp.stack(rows, axis=2)
-
-
-def _lower_map(v, p, ins):
-    fn = jnp_point_fn(p["fn"])
-    args = [jnp.asarray(a) if plan is None else jnp.asarray(a).reshape(plan)
-            for a, plan in zip(ins, map_operand_reshapes(v))]
-    return fn(*args)
-
-
-def _lower_reduce(v, p, ins):
-    fn = jnp_point_fn(p["fn"])
-    x = ins[0]
-    flat = x.reshape(x.shape[:-2] + (-1,))
-    acc = flat[..., 0]
-    for i in range(1, flat.shape[-1]):
-        acc = fn(acc, flat[..., i])
-    return acc
-
-
-def _lower_reduce_patch(v, p, ins):
-    fn = jnp_point_fn(p["fn"])
-    x = ins[0]
-    h_, w_, sh_, sw_ = x.shape[:4]
-    flat = x.reshape((h_, w_, sh_ * sw_) + x.shape[4:])
-    acc = flat[:, :, 0]
-    for i in range(1, sh_ * sw_):
-        acc = fn(acc, flat[:, :, i])
-    return acc
-
-
-def _lower_argmin(v, p, ins):
-    x = ins[0]
-    flat = x.reshape(x.shape[:-2] + (-1,))
-    return jnp.argmin(flat, axis=-1).astype(jnp.int64)
-
-
-def _lower_pad(v, p, ins):
-    x = ins[0]
-    l, rr, b, t = p["l"], p["r"], p["b"], p["t"]
-    out = jnp.full((x.shape[0] + b + t, x.shape[1] + l + rr) + x.shape[2:],
-                   p.get("value", 0), x.dtype)
-    return out.at[t:t + x.shape[0], l:l + x.shape[1]].set(x)
-
-
-def _lower_crop(v, p, ins):
-    x = ins[0]
-    l, rr, b, t = p["l"], p["r"], p["b"], p["t"]
-    return x[t:x.shape[0] - b, l:x.shape[1] - rr]
-
-
-def _lower_sparse_take(v, p, ins):
-    vals, mask = ins[0]
-    n = p["n"]
-    flat_v = vals.reshape((-1,) + vals.shape[2:])
-    flat_m = mask.reshape(-1)
-    idx = jnp.nonzero(flat_m, size=n, fill_value=0)[0]
-    valid = jnp.arange(n) < jnp.minimum(flat_m.sum(), n)
-    out_v = jnp.where(valid.reshape((n,) + (1,) * (flat_v.ndim - 1)),
-                      flat_v[idx], 0)
-    out_i = jnp.where(valid, idx.astype(jnp.int64), 0)
-    return (out_v, out_i)
-
-
-def _lower_external(v, p, ins):
-    # numpy roundtrip: External modules are imported foreign (Verilog-analog)
-    # code with a numpy model; not traceable, so unsupported under run_batch
-    return p["np_fn"](*[np.asarray(i) for i in ins])
-
-
-LOWERERS: Dict[str, Callable[[Val, Dict[str, Any], List[Any]], Any]] = {
-    "Const": lambda v, p, ins: jnp.asarray(p["value"]),
-    "TupleIndex": lambda v, p, ins: ins[0][p["i"]],
-    "Concat": lambda v, p, ins: tuple(ins),
-    "FanOut": lambda v, p, ins: tuple(ins[0] for _ in range(p["n"])),
-    "FanIn": lambda v, p, ins: ins[0],
-    "Map": _lower_map,
-    "Reduce": _lower_reduce,
-    "ReducePatch": _lower_reduce_patch,
-    "ArgMin": _lower_argmin,
-    "Replicate": lambda v, p, ins: jnp.broadcast_to(
-        ins[0][..., None, None], ins[0].shape + (p["m"], p["n"])),
-    "Stack": lambda v, p, ins: jnp.stack(ins, axis=-1)[..., None, :],
-    "Stencil": lambda v, p, ins: _jnp_stencil(p, ins[0]),
-    "Pad": _lower_pad,
-    "Crop": _lower_crop,
-    "Downsample": lambda v, p, ins: ins[0][::p["sy"], ::p["sx"]],
-    "Upsample": lambda v, p, ins: jnp.repeat(
-        jnp.repeat(ins[0], p["sy"], axis=0), p["sx"], axis=1),
-    "Filter": lambda v, p, ins: (ins[0], jnp.asarray(ins[1]).astype(bool)),
-    "SparseTake": _lower_sparse_take,
-    "External": _lower_external,
-}
-
-
-# --------------------------------------------------------------------------
-# fused-subgraph recognition (pallas backend)
-
-@dataclass
-class FusionPlan:
-    kernel: str                  # registry name
-    root: Val                    # node whose value the kernel produces
-    leaves: Tuple[Val, ...]      # graph inputs of the fused region
-    apply: Callable              # (*leaf_values) -> value of root
-    note: str
-
-
-def _consumer_counts(out: Val) -> Counter:
-    n: Counter = Counter()
-    for v in toposort(out):
-        for i in v.inputs:
-            n[i.uid] += 1
-    return n
-
-
-def _is_plain_image(t) -> bool:
-    return isinstance(t, ArrayT) and not isinstance(t.elem, (ArrayT, TupleT))
-
-
-def match_conv2d(root: Val, ncons: Counter) -> Optional[FusionPlan]:
-    """Stencil -> Map(Mul)(., Const) -> [Map(AddMSBs)]* -> Reduce(Add)
-    -> [Map(Rshift)] -> Map(RemoveMSBs -> u8)  =>  kernels/conv2d."""
-    if root.op != "Map" or root.p["fn"].name != "RemoveMSBs":
-        return None
-    s_out = scalar_of(root.ty)
-    if not isinstance(s_out, UInt) or s_out.bits() != 8:
-        return None
-    cur = root.inputs[0]
-    shift = 0
-    if (cur.op == "Map" and cur.p["fn"].name == "Rshift"
-            and ncons[cur.uid] == 1):
-        if isinstance(scalar_of(cur.ty), Float):
-            return None
-        shift = dict(cur.p["fn"].params)["n"]
-        cur = cur.inputs[0]
-    if not (cur.op == "Reduce" and cur.p["fn"].name in ("Add", "AddAsync")
-            and ncons[cur.uid] == 1):
-        return None
-    acc_bits = scalar_of(cur.ty).bits()
-    cur = cur.inputs[0]
-    while (cur.op == "Map" and cur.p["fn"].name == "AddMSBs"
-           and ncons[cur.uid] == 1):
-        cur = cur.inputs[0]
-    if not (cur.op == "Map" and cur.p["fn"].name == "Mul"
-            and len(cur.inputs) == 2 and ncons[cur.uid] == 1):
-        return None
-    a, b = cur.inputs
-    st, co = (a, b) if a.op == "Stencil" else (b, a)
-    if st.op != "Stencil" or co.op != "Const" or ncons[st.uid] != 1:
-        return None
-    x = st.inputs[0]
-    sx, sk = scalar_of(x.ty), scalar_of(co.ty)
-    if not (isinstance(sx, UInt) and isinstance(sk, UInt)):
-        return None
-    if not _is_plain_image(x.ty):
-        return None
-    p = st.p
-    kw = abs(p["r"] - p["l"]) + 1
-    kh = abs(p["t"] - p["b"]) + 1
-    if type_shape(co.ty) != (kh, kw):
-        return None
-    # exactness guard: the full dot product must not wrap — neither in the
-    # executor's declared accumulator width nor in the kernel's int32
-    max_sum = (2 ** sx.bits() - 1) * (2 ** sk.bits() - 1) * kh * kw
-    if max_sum >= 2 ** min(acc_bits, 31):
-        return None
-    kval = mask_to_width(np.asarray(co.p["value"]), sk).reshape(kh, kw)
-    l, bb = p["l"], p["b"]
-
-    from repro.kernels.registry import get_kernel
-    site = get_kernel("conv2d").site_fn
-
-    def apply(xv):
-        return site(xv, kval, l=l, b=bb, shift=shift)
-
-    note = (f"fused %{st.uid}:Stencil({kh}x{kw})->Map(Mul)->Reduce"
-            f"->Rshift({shift})->RemoveMSBs => kernels/conv2d (pallas)")
-    return FusionPlan("conv2d", root, (x,), apply, note)
-
-
-def match_sad(root: Val, ncons: Counter) -> Optional[FusionPlan]:
-    """Stencil(1 x nd) -> Map(AbsDiff)(Replicate(left)|left, .)
-    -> [Map(AddMSBs)]* -> Stencil(bh x bw) -> ReducePatch(Add) -> ArgMin
-    =>  kernels/sad (trailing-window STEREO form)."""
-    if root.op != "ArgMin":
-        return None
-    rp = root.inputs[0]
-    if not (rp.op == "ReducePatch" and rp.p["fn"].name in ("Add", "AddAsync")
-            and ncons[rp.uid] == 1):
-        return None
-    acc_bits = scalar_of(rp.ty).bits()
-    pst = rp.inputs[0]
-    if not (pst.op == "Stencil" and ncons[pst.uid] == 1):
-        return None
-    pp = pst.p
-    if pp["r"] != 0 or pp["t"] != 0 or pp["l"] > 0 or pp["b"] > 0:
-        return None                     # kernel implements trailing windows
-    bw = abs(pp["r"] - pp["l"]) + 1
-    bh = abs(pp["t"] - pp["b"]) + 1
-    cur = pst.inputs[0]
-    while (cur.op == "Map" and cur.p["fn"].name == "AddMSBs"
-           and ncons[cur.uid] == 1):
-        cur = cur.inputs[0]
-    if not (cur.op == "Map" and cur.p["fn"].name == "AbsDiff"
-            and len(cur.inputs) == 2 and ncons[cur.uid] == 1):
-        return None
-
-    def cand_stencil(c: Val, nd: int = 0):
-        cp = c.p if c.op == "Stencil" else None
-        return (c.op == "Stencil" and cp["r"] == 0 and cp["b"] == 0
-                and cp["t"] == 0 and cp["l"] < 0)
-
-    a, b = cur.inputs
-    cst, other = (b, a) if cand_stencil(b) else (a, b)
-    if not cand_stencil(cst) or ncons[cst.uid] != 1:
-        return None
-    nd = abs(cst.p["r"] - cst.p["l"]) + 1
-    right = cst.inputs[0]
-    if other.op == "Replicate":         # broadcast wires around the cands
-        if not (other.p["n"] == nd and other.p["m"] == 1
-                and ncons[other.uid] == 1):
-            return None
-        left = other.inputs[0]
-    elif _is_plain_image(other.ty):     # direct broadcasting Map
-        left = other
-    else:
-        return None
-    sl, sr = scalar_of(left.ty), scalar_of(right.ty)
-    if not (isinstance(sl, UInt) and isinstance(sr, UInt)):
-        return None
-    if not (_is_plain_image(left.ty) and _is_plain_image(right.ty)):
-        return None
-    if type_shape(left.ty) != type_shape(right.ty):
-        return None
-    # exactness guard: the SAD sum must not wrap (executor width or int32)
-    max_sum = (2 ** max(sl.bits(), sr.bits()) - 1) * bh * bw
-    if max_sum >= 2 ** min(acc_bits, 31):
-        return None
-
-    from repro.kernels.registry import get_kernel
-    site = get_kernel("sad").site_fn
-
-    def apply(lv, rv):
-        return site(lv, rv, nd=nd, bh=bh, bw=bw)
-
-    note = (f"fused %{cst.uid}:Stencil(1x{nd})->Map(AbsDiff)"
-            f"->Stencil({bh}x{bw})->ReducePatch->ArgMin"
-            f" => kernels/sad (pallas)")
-    return FusionPlan("sad", root, (left, right), apply, note)
-
-
-FUSION_MATCHERS = (match_conv2d, match_sad)
-
-
-# --------------------------------------------------------------------------
-# the lowered executable
-
-def _to_numpy(r):
-    if isinstance(r, tuple):
-        return tuple(_to_numpy(x) for x in r)
-    return np.asarray(r)
-
-
-class LoweredPipeline:
-    """Executable jnp lowering of an HWImg DAG, bit-exact vs executor.py.
-
-    ``backend="pallas"`` additionally dispatches recognized subgraphs to the
-    resident Pallas kernels; ``notes`` records every dispatch (the lowering
-    report)."""
-
-    def __init__(self, out: Val, backend: str = "jax"):
-        if backend not in ("jax", "pallas"):
-            raise ValueError(f"unknown lowering backend {backend!r}")
-        self.out = out
-        self.backend = backend
-        self.fusions: Dict[int, FusionPlan] = {}
-        self.notes: List[str] = []
-        if backend == "pallas":
-            ncons = _consumer_counts(out)
-            for v in toposort(out):
-                for m in FUSION_MATCHERS:
-                    plan = m(v, ncons)
-                    if plan is not None:
-                        self.fusions[v.uid] = plan
-                        self.notes.append(plan.note)
-                        break
-        self.notes.append(
-            f"lowering backend={backend}: {len(self.fusions)} fused kernel "
-            f"dispatch(es), generic jnp elsewhere")
-        self._order = self._schedule()
-
-    def _schedule(self) -> List[Val]:
-        """Topological order that skips fused interiors: at a fusion root
-        only the fusion's leaves are visited."""
-        order: List[Val] = []
-        seen = set()
-
-        def visit(v: Val):
-            if v.uid in seen:
-                return
-            seen.add(v.uid)
-            plan = self.fusions.get(v.uid)
-            for i in (plan.leaves if plan is not None else v.inputs):
-                visit(i)
-            order.append(v)
-
-        visit(self.out)
-        return order
-
-    def _eval(self, inputs: Dict[str, Any]):
-        env: Dict[int, Any] = {}
-        for v in self._order:
-            p = v.p
-            plan = self.fusions.get(v.uid)
-            if plan is not None:
-                r = plan.apply(*[env[l.uid] for l in plan.leaves])
-            elif v.op == "Input":
-                raw = inputs[p["name"]]
-                if isinstance(v.ty, TupleT):
-                    r = tuple(jnp.asarray(e) for e in raw)
-                else:
-                    r = jnp.asarray(raw)
-            else:
-                r = LOWERERS[v.op](v, p, [env[i.uid] for i in v.inputs])
-            env[v.uid] = _jnp_mask(r, v.ty)
-        return env[self.out.uid]
-
-    def __call__(self, inputs: Dict[str, Any]):
-        with enable_x64():
-            return _to_numpy(self._eval(inputs))
-
-    def run_batch(self, inputs: Dict[str, Any]):
-        """vmap over a leading frame axis on every input (the throughput /
-        serving entry point). All lowerings are traceable except External."""
-        with enable_x64():
-            return _to_numpy(jax.vmap(self._eval)(inputs))
-
-
-def lower_pipeline(out: Val, backend: str = "jax") -> LoweredPipeline:
-    return LoweredPipeline(out, backend=backend)
+from .lowering import (CompiledPipeline, Dispatch, LOWERERS,  # noqa: F401
+                       LoweredPipeline, RULES, RewriteRule, jnp_mask,
+                       jnp_point_fn, lower_pipeline, register_rule)
+
+# the old name for Dispatch records kept for callers that introspected plans
+FusionPlan = Dispatch
+
+__all__ = ["CompiledPipeline", "Dispatch", "FusionPlan", "LOWERERS",
+           "LoweredPipeline", "RULES", "RewriteRule", "jnp_mask",
+           "jnp_point_fn", "lower_pipeline", "register_rule"]

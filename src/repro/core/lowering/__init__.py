@@ -1,0 +1,31 @@
+"""The lowering compiler: automatic HWImg -> JAX/Pallas mapping as a
+multi-pass pipeline (the software analog of the paper's compile flow):
+
+  ir.py        pass 1 — explicit lowering IR (node table + use-def edges)
+  rewrite.py   pass 2 — declarative pattern-rewrite engine (fixpoint)
+  patterns.py  the resident rule library (conv2d, sad, separable filters,
+               pyramid collapse, second-moment window sums)
+  lowerers.py  generic per-operator jnp lowerings + wrap masking
+  engine.py    pass 3 — whole-pipeline jit execution engine
+
+mapper.py maps every operator site to a meets-or-exceeds Rigel2 hardware
+generator (paper §5.2); this package maps every operator site to a jnp
+implementation, with rewrite rules dispatching recognized subgraphs to the
+resident optimized Pallas kernels (kernels/registry.py).  A fusion fires
+only when provably bit-exact against executor.py; everything else takes
+the generic lowering, which is bit-exact by construction.
+
+Backends:
+    "jax"     generic lowering + jnp-level fusions, one jit per pipeline
+    "pallas"  the above + fused-subgraph dispatch to Pallas kernels
+
+Both run under the x64 context so the integer carrier (int64) and hardware
+wrap masking match executor.py exactly.
+"""
+from .engine import (CompiledPipeline, LoweredPipeline,  # noqa: F401
+                     lower_pipeline)
+from .ir import Dispatch, IRNode, LoweringIR  # noqa: F401
+from .lowerers import LOWERERS, jnp_mask, jnp_point_fn  # noqa: F401
+from .patterns import RULES, register_rule  # noqa: F401
+from .rewrite import (Chain, Either, Leaf, Many, Match, Opt,  # noqa: F401
+                      OpPat, Replace, Rewire, RewriteRule, apply_rules)

@@ -1,0 +1,303 @@
+"""Pass 3 of the lowering compiler: the jit-compiled execution engine.
+
+The scheduled, rewritten IR is compiled into jit programs instead of eager
+per-node dispatch: the schedule is partitioned into maximal segments, each
+traced into one XLA computation, so an integer pipeline becomes a single
+whole-pipeline program.
+
+Why segments rather than always one program: XLA:CPU unconditionally
+allows FMA contraction (`AllowFPOpFusion::Fast`) when an f32 multiply and
+a dependent add/subtract land in the same fused loop, and neither XLA
+flags nor optimization barriers survive to codegen.  A contracted
+`a*b - c*c` diverges from the IEEE-exact numpy executor (FLOW's 2x2 solve
+turns a det==0 into a tiny nonzero residual).  The partitioner therefore
+closes a segment exactly where an f32 add/sub would consume a value that
+an f32 multiply earlier in the same segment produced (tracking taint
+through data-movement ops, which loop fusion makes transparent): the
+program boundary materializes the product, restoring the op-at-a-time
+IEEE semantics the reference executor defines.  Integer arithmetic is
+exact under any fusion, so integer work never splits.
+
+Compiled programs are cached per input-shape/dtype signature (jax's jit
+cache; the engine keeps per-signature call stats for the lowering report)
+and shared by ``run``/``run_batch`` (batch mode jits the vmapped trace).
+
+``debug=True`` keeps the fully eager per-node path (``node_values``
+exposes the whole environment) for node-level diffing against executor.py.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import enable_x64
+
+from ..dtypes import ArrayT, Float, SparseT, TupleT
+from ..hwimg import Val
+from .ir import IRNode, LoweringIR
+from .lowerers import LOWERERS, jnp_mask
+from .patterns import RULES
+from .rewrite import apply_rules
+
+
+def _to_numpy(r):
+    if isinstance(r, tuple):
+        return tuple(_to_numpy(x) for x in r)
+    return np.asarray(r)
+
+
+def _spec(v) -> Any:
+    if isinstance(v, tuple):
+        return tuple(_spec(e) for e in v)
+    a = np.asarray(v)
+    return (a.shape, str(a.dtype))
+
+
+def _has_float(ty) -> bool:
+    if isinstance(ty, TupleT):
+        return any(_has_float(t) for t in ty.elems)
+    if isinstance(ty, (ArrayT, SparseT)):
+        return _has_float(ty.elem)
+    return isinstance(ty, Float)
+
+
+def _touches_float(n: IRNode) -> bool:
+    return _has_float(n.ty) or any(_has_float(t) for t in n.input_tys)
+
+
+# Contraction-safety classification (see module docstring).  Within one XLA
+# program, an f32 multiply whose result reaches a dependent add/subtract —
+# possibly through pure data movement, which loop fusion makes transparent
+# at scalar level — gets contracted to FMA.  Ops that *compute* something
+# else (div, sqrt, compare, convert) break the pattern.
+_MUL_FNS = frozenset({"Mul", "FloatMul"})
+_ADDSUB_FNS = frozenset({"Add", "AddAsync", "Sub", "FloatAdd", "FloatSub",
+                         "AbsDiff"})
+_SAFE_FNS = frozenset({"FloatDiv", "FloatSqrt", "ToFloat", "Max", "Min",
+                       "Gt", "And", "Abs", "Rshift", "AddMSBs",
+                       "RemoveMSBs"})
+_MOVE_OPS = frozenset({"Stencil", "Pad", "Crop", "Downsample", "Upsample",
+                       "Replicate", "Stack", "Concat", "TupleIndex",
+                       "FanOut", "FanIn", "Filter", "SparseTake"})
+
+
+def _float_kind(n: IRNode) -> str:
+    """'mul' (taints its value), 'addsub' (must not consume a tainted
+    value in the same program), 'move' (propagates taint), 'safe', or
+    'unknown' (treated as both mul and addsub)."""
+    if not _touches_float(n):
+        return "safe"
+    if n.op in _MOVE_OPS:
+        return "move"
+    if n.op in ("Map", "Reduce", "ReducePatch"):
+        name = n.params["fn"].name
+        if name in _MUL_FNS:
+            return "mul"
+        if name in _ADDSUB_FNS:
+            return "addsub"
+        if name in _SAFE_FNS:
+            return "safe"
+        return "unknown"            # user PointFn: be conservative
+    return "safe"                   # ArgMin / Const / External / ...
+
+
+def _eval_node(n: IRNode, env: Dict[int, Any]) -> Any:
+    if n.dispatch is not None:
+        r = n.dispatch.apply(*[env[u] for u in n.dispatch.leaves])
+    else:
+        r = LOWERERS[n.op](n, n.params, [env[u] for u in n.inputs])
+    return jnp_mask(r, n.ty)
+
+
+class _Task:
+    """One schedulable unit: a maximal integer segment (many nodes, one
+    program) or an isolated float node (one node, one program)."""
+
+    def __init__(self, nodes: List[IRNode], in_uids: Tuple[int, ...],
+                 out_uids: Tuple[int, ...]):
+        self.nodes = nodes
+        self.in_uids = in_uids
+        self.out_uids = out_uids
+        self._jit: Dict[str, Any] = {}
+
+    def _fn(self, *invals):
+        env = dict(zip(self.in_uids, invals))
+        for n in self.nodes:
+            env[n.uid] = _eval_node(n, env)
+        return tuple(env[u] for u in self.out_uids)
+
+    def call(self, mode: str, invals, in_axes):
+        if mode == "batch" and not any(a == 0 for a in in_axes):
+            mode = "frame"              # constant subgraph: no frame axis
+        key = mode if mode == "frame" else ("batch", in_axes)
+        if key not in self._jit:
+            fn = self._fn if mode == "frame" else jax.vmap(self._fn,
+                                                           in_axes=in_axes)
+            self._jit[key] = jax.jit(fn)
+        return self._jit[key](*invals)
+
+
+class CompiledPipeline:
+    """Executable lowering of an HWImg DAG, bit-exact vs executor.py.
+
+    Pipeline: build the IR (ir.py), rewrite it to fixpoint against the
+    resident rule library (rewrite.py / patterns.py; the pallas backend
+    additionally enables the Pallas-kernel dispatch rules), partition the
+    schedule, and compile jit programs per partition.  ``notes`` is the
+    lowering report; ``fusions`` maps pattern-root uid -> Dispatch."""
+
+    def __init__(self, out: Val, backend: str = "jax", debug: bool = False):
+        if backend not in ("jax", "pallas"):
+            raise ValueError(f"unknown lowering backend {backend!r}")
+        self.out = out
+        self.backend = backend
+        self.debug = debug
+        self.ir = LoweringIR(out)
+        self.fusions, self.notes, self.graph_rewrites = apply_rules(
+            self.ir, RULES, backend)
+        self._inputs = [n for n in self.ir.order if n.op == "Input"]
+        self._plan = self._partition()
+        self.notes.append(
+            f"lowering backend={backend}: {len(self.fusions)} fused "
+            f"dispatch(es), {self.graph_rewrites} graph rewrite(s); "
+            + ("eager debug mode" if debug else
+               f"jit engine: {len(self._plan)} program segment(s) over "
+               f"{sum(len(t.nodes) for t in self._plan)} nodes"))
+        # per-signature call counts; the first call at a signature traces
+        # and XLA-compiles, later calls hit the jit cache
+        self.signatures: Dict[Tuple[str, Any], int] = {}
+
+    # ---- planning ----
+    def _partition(self) -> List[_Task]:
+        """Greedy maximal segments: a segment closes only when the next node
+        is an f32 add/sub consuming a value that an f32 multiply *in the
+        same segment* produced (directly or through data movement) — the one
+        adjacency XLA:CPU would contract into an FMA.  Integer pipelines
+        compile to a single whole-pipeline program."""
+        body = [n for n in self.ir.order if n.op != "Input"]
+        groups: List[List[IRNode]] = []
+        cur: List[IRNode] = []
+        taint: Dict[int, bool] = {}     # uid -> mul-reachable in cur
+        for n in body:
+            kind = _float_kind(n)
+            ins = self.ir.effective_inputs(n)
+            if (kind in ("addsub", "unknown")
+                    and any(taint.get(u, False) for u in ins) and cur):
+                groups.append(cur)      # program boundary materializes the
+                cur = []                # product before the add sees it
+                taint = {}
+            cur.append(n)
+            taint[n.uid] = (kind in ("mul", "unknown")
+                            or (kind == "move"
+                                and any(taint.get(u, False) for u in ins)))
+        if cur:
+            groups.append(cur)
+
+        tasks = []
+        for nodes in groups:
+            produced = {n.uid for n in nodes}
+            in_uids: List[int] = []
+            for n in nodes:
+                for u in self.ir.effective_inputs(n):
+                    if u not in produced and u not in in_uids:
+                        in_uids.append(u)
+            out_uids = tuple(
+                n.uid for n in nodes
+                if n.uid == self.ir.root
+                or any(c not in produced for c in n.consumers))
+            tasks.append(_Task(nodes, tuple(in_uids), out_uids))
+        return tasks
+
+    # ---- execution ----
+    def _load_inputs(self, inputs: Dict[str, Any], env: Dict[int, Any]):
+        for n in self._inputs:
+            raw = inputs[n.params["name"]]
+            if isinstance(n.ty, TupleT):
+                env[n.uid] = tuple(jnp.asarray(e) for e in raw)
+            else:
+                env[n.uid] = jnp.asarray(raw)
+
+    def _run(self, inputs: Dict[str, Any], mode: str):
+        env: Dict[int, Any] = {}
+        self._load_inputs(inputs, env)
+        # batch mode: inputs carry the frame axis; a vmapped task broadcasts
+        # ALL its outputs onto it (vmap's out_axes=0), including outputs
+        # derived only from constants — so batchedness is tracked per task
+        # call, not per IR node
+        batched = {n.uid: True for n in self._inputs}
+        for t in self._plan:
+            axes = tuple(0 if batched.get(u, False) else None
+                         for u in t.in_uids)
+            outs = t.call(mode, [env[u] for u in t.in_uids], axes)
+            env.update(zip(t.out_uids, outs))
+            vmapped = mode == "batch" and any(a == 0 for a in axes)
+            for u in t.out_uids:
+                batched[u] = vmapped
+        return env[self.ir.root]
+
+    def _eval(self, inputs: Dict[str, Any]):
+        """Eager per-node evaluation (debug path / node-level diffing)."""
+        env: Dict[int, Any] = {}
+        self._load_inputs(inputs, env)
+        for n in self.ir.order:
+            if n.op != "Input":
+                env[n.uid] = _eval_node(n, env)
+        return env[self.ir.root]
+
+    def _record(self, inputs, mode: str) -> None:
+        sig = (mode, tuple(sorted((k, _spec(v)) for k, v in inputs.items())))
+        self.signatures[sig] = self.signatures.get(sig, 0) + 1
+
+    def __call__(self, inputs: Dict[str, Any]):
+        with enable_x64():
+            if self.debug:
+                return _to_numpy(self._eval(inputs))
+            self._record(inputs, "frame")
+            return _to_numpy(self._run(inputs, "frame"))
+
+    def run_batch(self, inputs: Dict[str, Any]):
+        """vmap over a leading frame axis on every input (the throughput /
+        serving entry point), through the same jit program cache."""
+        with enable_x64():
+            if self.debug:
+                return _to_numpy(jax.vmap(self._eval)(inputs))
+            self._record(inputs, "batch")
+            return _to_numpy(self._run(inputs, "batch"))
+
+    def node_values(self, inputs: Dict[str, Any]) -> Dict[int, Any]:
+        """Eager per-node evaluation returning every live node's value
+        keyed by uid — the node-level diffing hook (debug tooling)."""
+        vals: Dict[int, Any] = {}
+        with enable_x64():
+            env: Dict[int, Any] = {}
+            self._load_inputs(inputs, env)
+            for n in self.ir.order:
+                if n.op != "Input":
+                    env[n.uid] = _eval_node(n, env)
+                vals[n.uid] = _to_numpy(env[n.uid])
+        return vals
+
+    # ---- reporting ----
+    def cache_stats(self) -> List[str]:
+        """Per-signature jit cache stats (mode, shapes, calls)."""
+        lines = []
+        for (mode, spec), calls in sorted(self.signatures.items(),
+                                          key=lambda kv: repr(kv[0])):
+            shapes = ", ".join(f"{name}={s}" for name, s in spec)
+            lines.append(f"jit[{mode}] {shapes}: calls={calls} "
+                         f"(first call compiled, {calls - 1} cache hit(s))")
+        return lines
+
+    def report_lines(self) -> List[str]:
+        return list(self.notes) + self.cache_stats()
+
+
+class LoweredPipeline(CompiledPipeline):
+    """Back-compat alias for the pre-refactor class name."""
+
+
+def lower_pipeline(out: Val, backend: str = "jax",
+                   debug: bool = False) -> CompiledPipeline:
+    return CompiledPipeline(out, backend=backend, debug=debug)

@@ -1,0 +1,320 @@
+"""Generic per-operator jnp lowerings (the LOWERERS table).
+
+Each entry maps one HWImg operator to a traceable jnp implementation,
+bit-exact against executor.py by construction: integer values ride an int64
+carrier and every node's result is wrapped to its declared width by
+``jnp_mask`` (the jnp mirror of executor._mask_result).  The table operates
+on lowering-IR nodes (ir.py), so entries read type/shape metadata off the
+node instead of re-deriving it.
+
+``External`` ops lower through ``jax.pure_callback`` with the result
+shape/dtype declared from the node's HWImg type, so imported foreign
+(Verilog-analog) modules trace under ``jit`` and vmap (run_batch) instead
+of forcing an untraceable numpy roundtrip.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..dtypes import (ArrayT, Bits, Bool, DType, Int, SparseT, TupleT, UInt,
+                      mask_to_width)
+from ..hwimg import PointFn, map_reshape_plans, scalar_of, type_shape
+from .ir import IRNode
+
+# --------------------------------------------------------------------------
+# scalar function lowering: PointFn -> traceable jnp callable
+
+_JNP_FNS: Dict[str, Callable[[Dict[str, Any]], Callable]] = {
+    "Abs": lambda p: jnp.abs,
+    "AbsDiff": lambda p: (
+        lambda a, b: jnp.abs(a.astype(jnp.int64) - b.astype(jnp.int64))),
+    "Max": lambda p: jnp.maximum,
+    "Min": lambda p: jnp.minimum,
+    "And": lambda p: jnp.logical_and,
+    "FloatMul": lambda p: (
+        lambda a, b: (a.astype(jnp.float32)
+                      * b.astype(jnp.float32)).astype(jnp.float32)),
+    "FloatAdd": lambda p: (
+        lambda a, b: (a.astype(jnp.float32)
+                      + b.astype(jnp.float32)).astype(jnp.float32)),
+    "FloatSub": lambda p: (
+        lambda a, b: (a.astype(jnp.float32)
+                      - b.astype(jnp.float32)).astype(jnp.float32)),
+    "FloatDiv": lambda p: (
+        lambda a, b: jnp.where(
+            b != 0,
+            a.astype(jnp.float32) / jnp.where(b == 0, 1, b).astype(jnp.float32),
+            0).astype(jnp.float32)),
+    "FloatSqrt": lambda p: (
+        lambda a: jnp.sqrt(jnp.maximum(a.astype(jnp.float32),
+                                       0)).astype(jnp.float32)),
+}
+
+
+def jnp_point_fn(fn: PointFn) -> Callable:
+    """The jnp equivalent of fn.np_fn. PointFns written as dtype-generic
+    operator expressions (a + b, a >> n, a.astype) trace as-is; the ones
+    that call numpy ufuncs get explicit jnp replacements."""
+    if fn.name in _JNP_FNS:
+        return _JNP_FNS[fn.name](dict(fn.params))
+    return fn.np_fn
+
+
+# --------------------------------------------------------------------------
+# hardware wrap masking (the jnp mirror of executor._mask_result)
+
+def jnp_mask(r, ty):
+    if isinstance(r, tuple):
+        if isinstance(ty, TupleT):
+            return tuple(jnp_mask(x, t) for x, t in zip(r, ty.elems))
+        if isinstance(ty, ArrayT) and isinstance(ty.elem, TupleT):
+            return tuple(jnp_mask(x, t) for x, t in zip(r, ty.elem.elems))
+        return r
+    s = scalar_of(ty)
+    if isinstance(s, (UInt, Bits)):
+        return jnp.asarray(r).astype(jnp.int64) & ((1 << s.bits()) - 1)
+    if isinstance(s, Int):
+        n = s.bits()
+        x = jnp.asarray(r).astype(jnp.int64) & ((1 << n) - 1)
+        return jnp.where(x >= (1 << (n - 1)), x - (1 << n), x)
+    return jnp.asarray(r)
+
+
+# --------------------------------------------------------------------------
+# generic per-operator lowerings
+
+def jnp_stencil(p, x):
+    l, r, b, t = p["l"], p["r"], p["b"], p["t"]
+    sw, sh = abs(r - l) + 1, abs(t - b) + 1
+    h, w = x.shape[:2]
+    pl, pt_ = max(0, -min(l, 0)), max(0, -min(b, 0))
+    pr, pb_ = max(0, max(r + sw, sw)), max(0, max(t + sh, sh))
+    xp = jnp.zeros((h + pt_ + pb_, w + pl + pr) + x.shape[2:], x.dtype)
+    xp = xp.at[pt_:pt_ + h, pl:pl + w].set(x)
+    rows = []
+    for dy in range(sh):
+        cols = []
+        for dx in range(sw):
+            oy, ox = b + dy, l + dx
+            cols.append(xp[pt_ + oy:pt_ + oy + h, pl + ox:pl + ox + w])
+        rows.append(jnp.stack(cols, axis=2))
+    return jnp.stack(rows, axis=2)
+
+
+def _lower_map(v: IRNode, p, ins):
+    fn = jnp_point_fn(p["fn"])
+    args = [jnp.asarray(a) if plan is None else jnp.asarray(a).reshape(plan)
+            for a, plan in zip(ins, map_reshape_plans(v.ty, v.input_tys))]
+    return fn(*args)
+
+
+def _lower_reduce(v, p, ins):
+    fn = jnp_point_fn(p["fn"])
+    x = ins[0]
+    flat = x.reshape(x.shape[:-2] + (-1,))
+    acc = flat[..., 0]
+    for i in range(1, flat.shape[-1]):
+        acc = fn(acc, flat[..., i])
+    return acc
+
+
+def _lower_reduce_patch(v, p, ins):
+    fn = jnp_point_fn(p["fn"])
+    x = ins[0]
+    h_, w_, sh_, sw_ = x.shape[:4]
+    flat = x.reshape((h_, w_, sh_ * sw_) + x.shape[4:])
+    acc = flat[:, :, 0]
+    for i in range(1, sh_ * sw_):
+        acc = fn(acc, flat[:, :, i])
+    return acc
+
+
+def _lower_argmin(v, p, ins):
+    x = ins[0]
+    flat = x.reshape(x.shape[:-2] + (-1,))
+    return jnp.argmin(flat, axis=-1).astype(jnp.int64)
+
+
+def _lower_pad(v, p, ins):
+    x = ins[0]
+    l, rr, b, t = p["l"], p["r"], p["b"], p["t"]
+    out = jnp.full((x.shape[0] + b + t, x.shape[1] + l + rr) + x.shape[2:],
+                   p.get("value", 0), x.dtype)
+    return out.at[t:t + x.shape[0], l:l + x.shape[1]].set(x)
+
+
+def _lower_crop(v, p, ins):
+    x = ins[0]
+    l, rr, b, t = p["l"], p["r"], p["b"], p["t"]
+    return x[t:x.shape[0] - b, l:x.shape[1] - rr]
+
+
+def _lower_sparse_take(v, p, ins):
+    vals, mask = ins[0]
+    n = p["n"]
+    flat_v = vals.reshape((-1,) + vals.shape[2:])
+    flat_m = mask.reshape(-1)
+    idx = jnp.nonzero(flat_m, size=n, fill_value=0)[0]
+    valid = jnp.arange(n) < jnp.minimum(flat_m.sum(), n)
+    out_v = jnp.where(valid.reshape((n,) + (1,) * (flat_v.ndim - 1)),
+                      flat_v[idx], 0)
+    out_i = jnp.where(valid, idx.astype(jnp.int64), 0)
+    return (out_v, out_i)
+
+
+# --- External: pure_callback with an x64-proof transport codec -------------
+#
+# Imported foreign (Verilog-analog) modules carry a numpy model; lowering it
+# through ``jax.pure_callback`` with declared result shapes/dtypes makes the
+# site traceable under jit and vmap (``vmap_method="sequential"`` loops
+# frames through the numpy model, preserving per-frame semantics).
+#
+# Caveat the codec solves: jax canonicalizes callback operands AND results
+# *at execution time on the runtime thread*, where the engine's thread-local
+# ``enable_x64`` scope is not active — an int64 buffer silently becomes
+# int32 once the callback runs under scan/vmap.  So values cross the
+# boundary in x64-independent dtypes: uint32/int32 for integer scalars that
+# fit, a (uint32 lo, int32 hi) plane pair for wider ones, float32/bool
+# as-is.  The callback decodes to the executor's int64 carrier, runs the
+# numpy model, masks to the declared widths (executor semantics), and
+# re-encodes.
+
+def _leaf_specs(ty: DType):
+    """(shape, scalar) leaves of ``ty`` in the executor's runtime value
+    layout order (hwimg.py docstring)."""
+    if isinstance(ty, TupleT):
+        return [leaf for t in ty.elems for leaf in _leaf_specs(t)]
+    if isinstance(ty, ArrayT) and isinstance(ty.elem, TupleT):
+        return [((ty.h, ty.w) + type_shape(t), scalar_of(t))
+                for t in ty.elem.elems]
+    if isinstance(ty, SparseT):
+        return [(type_shape(ty), scalar_of(ty)), ((ty.h, ty.w), Bool)]
+    return [(type_shape(ty), scalar_of(ty))]
+
+
+def _flat_values(ty: DType, val):
+    if isinstance(ty, TupleT):
+        return [x for t, v_ in zip(ty.elems, val) for x in _flat_values(t, v_)]
+    if isinstance(ty, (SparseT, ArrayT)) and isinstance(val, tuple):
+        return list(val)
+    return [val]
+
+
+def _unflat_values(ty: DType, it):
+    if isinstance(ty, TupleT):
+        return tuple(_unflat_values(t, it) for t in ty.elems)
+    if isinstance(ty, ArrayT) and isinstance(ty.elem, TupleT):
+        return tuple(next(it) for _ in ty.elem.elems)
+    if isinstance(ty, SparseT):
+        return (next(it), next(it))
+    return next(it)
+
+
+def _is_wide(s: DType) -> bool:
+    return (isinstance(s, (UInt, Bits, Int))
+            and s.bits() > (31 if isinstance(s, Int) else 32))
+
+
+def _transport_structs(shape, s: DType):
+    if isinstance(s, (UInt, Bits, Int)):
+        if _is_wide(s):
+            return [jax.ShapeDtypeStruct(shape, np.uint32),
+                    jax.ShapeDtypeStruct(shape, np.int32)]
+        d = np.int32 if isinstance(s, Int) else np.uint32
+        return [jax.ShapeDtypeStruct(shape, d)]
+    return [jax.ShapeDtypeStruct(shape, s.np_dtype())]
+
+
+def _encode_jnp(x, s: DType):
+    if isinstance(s, (UInt, Bits, Int)):
+        x = jnp.asarray(x).astype(jnp.int64)
+        if _is_wide(s):
+            return [(x & 0xFFFFFFFF).astype(jnp.uint32),
+                    (x >> 32).astype(jnp.int32)]
+        return [x.astype(jnp.int32 if isinstance(s, Int) else jnp.uint32)]
+    return [jnp.asarray(x).astype(s.np_dtype())]
+
+
+def _encode_np(x, s: DType):
+    if isinstance(s, (UInt, Bits, Int)):
+        x = mask_to_width(np.asarray(x), s)      # executor output masking
+        if _is_wide(s):
+            return [(x & 0xFFFFFFFF).astype(np.uint32),
+                    (x >> 32).astype(np.int32)]
+        return [x.astype(np.int32 if isinstance(s, Int) else np.uint32)]
+    return [np.asarray(x, s.np_dtype())]
+
+
+def _decode(planes, s: DType, xp):
+    if isinstance(s, (UInt, Bits, Int)):
+        if _is_wide(s):
+            lo, hi = planes
+            return (xp.asarray(hi).astype(xp.int64) << 32) | \
+                xp.asarray(lo).astype(xp.int64)
+        return xp.asarray(planes[0]).astype(xp.int64)
+    return xp.asarray(planes[0])
+
+
+def _n_planes(s: DType) -> int:
+    return 2 if _is_wide(s) else 1
+
+
+def _lower_external(v: IRNode, p, ins):
+    np_fn = p["np_fn"]
+    in_specs = [_leaf_specs(t) for t in v.input_tys]
+    out_specs = _leaf_specs(v.ty)
+    structs = tuple(st for shape, s in out_specs
+                    for st in _transport_structs(shape, s))
+
+    def cb(*flat):
+        it = iter(flat)
+        args = []
+        for ty, specs in zip(v.input_tys, in_specs):
+            leaves = [_decode([next(it) for _ in range(_n_planes(s))], s, np)
+                      for _, s in specs]
+            args.append(_unflat_values(ty, iter(leaves)))
+        r = np_fn(*args)
+        flat_r = _flat_values(v.ty, r)
+        return tuple(plane for x, (_, s) in zip(flat_r, out_specs)
+                     for plane in _encode_np(x, s))
+
+    flat_in = []
+    for val, ty, specs in zip(ins, v.input_tys, in_specs):
+        for x, (_, s) in zip(_flat_values(ty, val), specs):
+            flat_in.extend(_encode_jnp(x, s))
+
+    res = jax.pure_callback(cb, structs, *flat_in, vmap_method="sequential")
+    res = res if isinstance(res, tuple) else (res,)
+    it = iter(res)
+    leaves = [_decode([next(it) for _ in range(_n_planes(s))], s, jnp)
+              for _, s in out_specs]
+    return _unflat_values(v.ty, iter(leaves))
+
+
+LOWERERS: Dict[str, Callable[[IRNode, Dict[str, Any], List[Any]], Any]] = {
+    "Const": lambda v, p, ins: jnp.asarray(p["value"]),
+    "TupleIndex": lambda v, p, ins: ins[0][p["i"]],
+    "Concat": lambda v, p, ins: tuple(ins),
+    "FanOut": lambda v, p, ins: tuple(ins[0] for _ in range(p["n"])),
+    "FanIn": lambda v, p, ins: ins[0],
+    "Map": _lower_map,
+    "Reduce": _lower_reduce,
+    "ReducePatch": _lower_reduce_patch,
+    "ArgMin": _lower_argmin,
+    "Replicate": lambda v, p, ins: jnp.broadcast_to(
+        ins[0][..., None, None], ins[0].shape + (p["m"], p["n"])),
+    "Stack": lambda v, p, ins: jnp.stack(ins, axis=-1)[..., None, :],
+    "Stencil": lambda v, p, ins: jnp_stencil(p, ins[0]),
+    "Pad": _lower_pad,
+    "Crop": _lower_crop,
+    "Downsample": lambda v, p, ins: ins[0][::p["sy"], ::p["sx"]],
+    "Upsample": lambda v, p, ins: jnp.repeat(
+        jnp.repeat(ins[0], p["sy"], axis=0), p["sx"], axis=1),
+    "Filter": lambda v, p, ins: (ins[0], jnp.asarray(ins[1]).astype(bool)),
+    "SparseTake": _lower_sparse_take,
+    "External": _lower_external,
+}

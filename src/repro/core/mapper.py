@@ -14,18 +14,15 @@ A site is characterized by:
 from __future__ import annotations
 
 import math
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from fractions import Fraction
-from typing import Any, Dict, List, Optional, Tuple
-
-import numpy as np
+from typing import Dict, Optional, Tuple
 
 from . import schedule as sched
-from .dtypes import ArrayT, SparseT, TupleT, DType
-from .hwimg import (OPS, PointFn, Val, scalar_count, scalar_of, toposort,
-                    type_shape)
+from .dtypes import ArrayT, SparseT, DType
+from .hwimg import OPS, PointFn, Val, scalar_count, scalar_of, toposort
 from .rigel import (Interface, Resources, RModule, STATIC, STREAM,
-                    ScheduleType, fifo_resources, optimize_lanes)
+                    ScheduleType, optimize_lanes)
 
 WIRING_OPS = {"TupleIndex", "FanOut", "FanIn"}
 

@@ -15,7 +15,6 @@ that.
 """
 from __future__ import annotations
 
-import math
 from fractions import Fraction
 from typing import Tuple
 

@@ -4,7 +4,6 @@ from __future__ import annotations
 import os
 
 import jax.numpy as jnp
-import numpy as np
 
 from .kernel import TILE_ROWS, conv2d_strips
 

@@ -1,12 +1,13 @@
 """Operator-to-kernel registry: the resident optimized kernels addressable
-by the automatic lowering pass (core/lower.py).
+by the lowering compiler (core/lowering/).
 
 This is the software analog of the paper's library of hand-optimized Rigel2
-hardware generators (§5.2): the lowering pass mapper recognizes an HWImg
-subgraph ("fused_ops" chain) at a site and dispatches it to the registered
-Pallas implementation, exactly as HWTool's local mapping dispatches each
-operator site to a meets-or-exceeds generator instance. Every entry carries
-its pure-jnp oracle so equivalence stays testable kernel-by-kernel.
+hardware generators (§5.2): a declarative rewrite rule (``pattern``, see
+core/lowering/patterns.py) recognizes an HWImg subgraph at a site and
+dispatches it to the registered Pallas implementation through ``site_fn``,
+exactly as HWTool's local mapping dispatches each operator site to a
+meets-or-exceeds generator instance. Every entry carries its pure-jnp
+oracle so equivalence stays testable kernel-by-kernel.
 """
 from __future__ import annotations
 
@@ -20,7 +21,8 @@ class KernelEntry:
     fused_ops: Tuple[str, ...]      # HWImg op chain the kernel implements
     pallas_fn: Callable             # Pallas-backed entry point
     ref_fn: Callable                # pure-jnp oracle (bit/allclose-exact)
-    site_fn: Optional[Callable] = None  # HWImg-site adapter used by lower.py
+    site_fn: Optional[Callable] = None  # HWImg-site adapter (lowering)
+    pattern: Optional[str] = None   # rewrite-rule name that dispatches here
     description: str = ""
 
 
@@ -47,10 +49,12 @@ def _register_resident() -> None:
     register_kernel(KernelEntry(
         "conv2d", ("Stencil", "Map:Mul", "Reduce:Add"),
         conv2d_stencil, conv2d_ref, site_fn=conv2d_hwimg_site,
+        pattern="conv2d",
         description="row-strip stencil convolution (CONVOLUTION, fig. 1)"))
     register_kernel(KernelEntry(
         "sad", ("Stencil", "Map:AbsDiff", "ReducePatch:Add", "ArgMin"),
         sad_disparity, sad_ref, site_fn=sad_hwimg_site,
+        pattern="sad",
         description="SAD block-matching disparity (STEREO, fig. 9)"))
     register_kernel(KernelEntry(
         "flash_attention", (),

@@ -14,7 +14,6 @@ os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
 
 import argparse
 import json
-import math
 import time
 from typing import Any, Dict
 

@@ -17,7 +17,6 @@ import argparse
 import json
 import os
 import signal
-import sys
 import time
 
 import jax

@@ -20,8 +20,6 @@ Everything except the two all-to-alls is device-local. Differentiable
 from __future__ import annotations
 
 import math
-from functools import partial
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp

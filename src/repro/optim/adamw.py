@@ -3,7 +3,7 @@ parameter shardings, so ZeRO-style partitioning comes from the same
 meets-or-exceeds mapper as the weights."""
 from __future__ import annotations
 
-from typing import Any, Dict, NamedTuple
+from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp

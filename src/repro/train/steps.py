@@ -9,18 +9,16 @@ Distributed-optimization options (config-driven):
 """
 from __future__ import annotations
 
-import math
 from dataclasses import dataclass
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.models import build_forward
 from repro.models.config import ModelConfig
 from repro.models.model import abstract_cache
-from repro.optim import adamw_init, adamw_update
+from repro.optim import adamw_update
 
 
 @dataclass(frozen=True)

@@ -1,19 +1,22 @@
-"""Cross-backend equivalence suite: the automatic HWImg->JAX lowering
-(core/lower.py) must be *bit-identical* to the numpy reference executor on
-every backend — "jax" (generic jnp) and "pallas" (generic jnp + fused
-dispatch to the resident Pallas kernels) — for the paper's four apps and
-for randomized DAGs over the point-op vocabulary."""
+"""Cross-backend equivalence suite: the lowering compiler (core/lowering/)
+must be *bit-identical* to the numpy reference executor on every backend —
+"jax" (jnp lowering + jnp-level fusions under the segmented jit engine) and
+"pallas" (the above + fused dispatch to the resident Pallas kernels) — for
+the paper's four apps, the PYRAMID app, randomized DAGs over the point-op
+vocabulary, and every fusion-guard boundary."""
 import numpy as np
 import pytest
 
 from repro.core import (AddAsync, AddMSBs, Array2d, Const, Map, Mul, Crop,
                         Downsample, Input, Pad, Reduce, RemoveMSBs, Rshift,
                         Stencil, UInt, Upsample)
+from repro.core.dtypes import Int
 from repro.core.executor import evaluate
-from repro.core.hwimg import (Abs, AbsDiff, Add, Max, Min, Sub, scalar_of)
-from repro.core.lower import lower_pipeline
+from repro.core.hwimg import (Abs, AbsDiff, Add, External, Max, Min, Sub,
+                              scalar_of)
+from repro.core.lower import lower_pipeline  # the back-compat shim
 
-APPS = ["convolution", "stereo", "flow", "descriptor"]
+APPS = ["convolution", "stereo", "flow", "descriptor", "pyramid"]
 BACKENDS = ["jax", "pallas"]
 
 rng_global = np.random.RandomState(11)
@@ -48,20 +51,99 @@ def test_sad_fusion_dispatches_to_pallas_kernel(lowering_cases):
     assert len(lp.fusions) == 1
 
 
-@pytest.mark.parametrize("app", ["flow", "descriptor"])
-def test_float_apps_take_generic_lowering(app, lowering_cases):
-    """No pattern in FLOW/DESCRIPTOR meets the fusion exactness guards."""
+@pytest.mark.parametrize("app,expected", [("flow", 5), ("descriptor", 3)])
+def test_second_moment_window_fusions_fire(app, expected, lowering_cases):
+    """The FLOW second-moment block (Ix·Iy products -> box-sum) fuses into
+    jnp window-reduces on both lowering backends."""
     design, _ = lowering_cases[app]
-    assert not design.lower("pallas").fusions
+    for backend in BACKENDS:
+        lp = design.lower(backend)
+        assert len(lp.fusions) == expected, lp.notes
+        assert all(d.kernel == "window_sum" for d in lp.fusions.values())
+
+
+def test_pyramid_chains_collapse(lowering_cases):
+    """Down/Down and Up/Up chains collapse to combined-stride nodes."""
+    design, _ = lowering_cases["pyramid"]
+    lp = design.lower("jax")
+    assert lp.graph_rewrites == 2, lp.notes
+    assert any("Downsample(4x4)" in n for n in lp.notes), lp.notes
+    assert any("Upsample(4x4)" in n for n in lp.notes), lp.notes
 
 
 @pytest.mark.parametrize("backend", BACKENDS)
-@pytest.mark.parametrize("app", ["convolution", "stereo"])
+@pytest.mark.parametrize("app", ["convolution", "stereo", "flow"])
 def test_run_batch_matches_per_frame(app, backend, lowering_cases):
     """vmap-over-frames (the throughput entry point) == per-frame loop."""
     design, inputs_fn = lowering_cases[app]
     batch = inputs_fn(np.random.RandomState(3), frames=3)
     assert _eq(design.run_batch(batch), design.run_batch(batch, backend=backend))
+
+
+# ---- fusion guard boundaries ----
+
+def _conv_chain(acc_widen, w=24, h=16):
+    """Stencil->Mul->AddMSBs(acc_widen)->Reduce->Rshift->RemoveMSBs chain;
+    u16 products widened to a (16+acc_widen)-bit accumulator, u8 output."""
+    rng = np.random.RandomState(5)
+    inp = Input(Array2d(UInt(8), w, h), "x")
+    k = rng.randint(128, 256, (8, 8)).astype(np.int64)
+    st = Stencil(-7, 0, -7, 0)(inp)
+    prod = Map(Mul)(st, Const(Array2d(UInt(8), 8, 8), k))
+    s = Reduce(AddAsync)(Map(AddMSBs(acc_widen))(prod))
+    out = Map(RemoveMSBs(8 + acc_widen))(Map(Rshift(3))(s))
+    x = rng.randint(0, 256, (h, w)).astype(np.int64)
+    return out, x
+
+
+def test_conv2d_wrap_guard_boundary():
+    """max_sum = (2^8-1)^2 * 64 = 4161600: a u22 accumulator (2^22 >
+    max_sum) fuses, a u21 accumulator (2^21 <= max_sum) must fall back —
+    and both stay bit-exact."""
+    for widen, want_fused in ((6, True), (5, False)):
+        out, x = _conv_chain(widen)
+        lp = lower_pipeline(out, backend="pallas")
+        assert (len(lp.fusions) == 1) == want_fused, lp.notes
+        assert _eq(evaluate(out, {"x": x}), lp({"x": x}))
+
+
+def test_sad_wrap_guard_boundary():
+    """SAD max_sum = (2^8-1)*bh*bw: a u14 accumulator takes the fusion at
+    8x8 blocks (16320 < 16384), a u13 one must fall back, bit-exact."""
+    from repro.core import ArgMin, ReducePatch, Replicate, TupleT
+    rng = np.random.RandomState(7)
+    for widen, want_fused in ((6, True), (5, False)):
+        img = Array2d(UInt(8), 32, 16)
+        inp = Input(TupleT((img, img)), "p")
+        left, right = inp[0], inp[1]
+        cand = Stencil(-7, 0, 0, 0)(right)
+        diff = Map(AbsDiff)(Replicate(8, 1)(left), cand)
+        wide = Map(AddMSBs(widen))(diff)          # u(8+widen) accumulator
+        patches = Stencil(-7, 0, -7, 0)(wide)
+        out = ArgMin(ReducePatch(AddAsync)(patches))
+        lp = lower_pipeline(out, backend="pallas")
+        assert (len(lp.fusions) == 1) == want_fused, lp.notes
+        l = rng.randint(0, 256, (16, 32)).astype(np.int64)
+        r = np.roll(l, 2, axis=-1)
+        assert _eq(evaluate(out, {"p": (l, r)}), lp({"p": (l, r)}))
+
+
+def test_multi_consumer_stencil_is_not_fused():
+    """A stencil whose patches feed a second consumer must not be claimed
+    by the conv2d fusion (interior single-consumer discipline)."""
+    rng = np.random.RandomState(5)
+    inp = Input(Array2d(UInt(8), 24, 16), "x")
+    k = rng.randint(0, 16, (4, 4)).astype(np.int64)
+    st = Stencil(-3, 0, -3, 0)(inp)
+    prod = Map(Mul)(st, Const(Array2d(UInt(8), 4, 4), k))
+    s = Reduce(AddAsync)(Map(AddMSBs(16))(prod))
+    u8 = Map(RemoveMSBs(24))(Map(Rshift(4))(s))
+    other = Reduce(Max)(st)                       # second consumer of st
+    out = Map(Add)(u8, other)
+    lp = lower_pipeline(out, backend="pallas")
+    assert not lp.fusions, lp.notes
+    x = rng.randint(0, 256, (16, 24)).astype(np.int64)
+    assert _eq(evaluate(out, {"x": x}), lp({"x": x}))
 
 
 def test_unsafe_conv_chain_is_not_fused_but_stays_exact():
@@ -81,22 +163,174 @@ def test_unsafe_conv_chain_is_not_fused_but_stays_exact():
     assert _eq(evaluate(out, {"x": x}), lp({"x": x}))
 
 
+# ---- the three new rewrite rules ----
+
 @pytest.mark.parametrize("backend", BACKENDS)
-def test_structural_ops_cross_backend(backend):
-    """Pad / centered Stencil / Crop / Downsample / Upsample — the
-    geometry ops, in a shape the fusion matchers must not claim."""
+def test_separable_filter_split(backend):
+    """A rank-1 integer kernel splits into two 1-D conv passes (on the
+    pallas backend the conv2d Pallas dispatch takes priority when its
+    chain matches; bare Reduce roots take the separable split there too)."""
+    rng = np.random.RandomState(3)
+    inp = Input(Array2d(UInt(8), 24, 16), "x")
+    k = np.outer([1, 2, 3, 2], [1, 1, 2, 1]).astype(np.int64)
+    st = Stencil(-3, 0, -3, 0)(inp)
+    prod = Map(Mul)(st, Const(Array2d(UInt(8), 4, 4), k))
+    out = Reduce(AddAsync)(Map(AddMSBs(16))(prod))
+    lp = lower_pipeline(out, backend=backend)
+    assert [d.kernel for d in lp.fusions.values()] == ["separable_conv"]
+    x = rng.randint(0, 256, (16, 24)).astype(np.int64)
+    assert _eq(evaluate(out, {"x": x}), lp({"x": x}))
+
+
+def test_separable_signed_sobel_kernel():
+    """Sobel is rank-1 over the integers with signed factors."""
+    rng = np.random.RandomState(3)
+    sob = np.array([[-1, 0, 1], [-2, 0, 2], [-1, 0, 1]], dtype=np.int64)
+    inp = Input(Array2d(UInt(8), 24, 16), "x")
+    st = Stencil(-1, 1, -1, 1)(inp)
+    out = Reduce(AddAsync)(Map(Mul)(st, Const(Array2d(Int(8), 3, 3), sob)))
+    lp = lower_pipeline(out, backend="jax")
+    assert [d.kernel for d in lp.fusions.values()] == ["separable_conv"]
+    x = rng.randint(0, 256, (16, 24)).astype(np.int64)
+    assert _eq(evaluate(out, {"x": x}), lp({"x": x}))
+
+
+def test_full_rank_kernel_is_not_split():
+    rng = np.random.RandomState(3)
+    inp = Input(Array2d(UInt(8), 24, 16), "x")
+    k = rng.randint(1, 16, (4, 4)).astype(np.int64)
+    assert np.linalg.matrix_rank(k) > 1
+    st = Stencil(-3, 0, -3, 0)(inp)
+    out = Reduce(AddAsync)(Map(AddMSBs(16))(
+        Map(Mul)(st, Const(Array2d(UInt(8), 4, 4), k))))
+    lp = lower_pipeline(out, backend="jax")
+    assert not lp.fusions
+    x = rng.randint(0, 256, (16, 24)).astype(np.int64)
+    assert _eq(evaluate(out, {"x": x}), lp({"x": x}))
+
+
+def test_separable_app_kernel_fires_in_convolution_pipeline():
+    """Convolution(kernel=separable_kernel()) takes the separable split on
+    the jax backend and the conv2d Pallas dispatch on pallas."""
+    from repro.apps import Convolution
+    from repro.apps.convolution import separable_kernel
+    from repro.core import compile_pipeline
+    design = compile_pipeline(Convolution(w=96, h=40,
+                                          kernel=separable_kernel()))
+    assert [d.kernel for d in design.lower("jax").fusions.values()] == \
+        ["separable_conv"]
+    assert [d.kernel for d in design.lower("pallas").fusions.values()] == \
+        ["conv2d"]
+    rng = np.random.RandomState(1)
+    inp = {"convolution.in": rng.randint(0, 256, (40, 96)).astype(np.int64)}
+    ref = design.run(inp)
+    assert _eq(ref, design.run(inp, backend="jax"))
+    assert _eq(ref, design.run(inp, backend="pallas"))
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_rewire_of_dispatch_leaf_terminates(backend):
+    """A Down(Up) identity pair feeding a fused region's leaf: the rewire
+    must retarget the dispatch's leaf (regression: the rewired node stayed
+    live through the dispatch and the fixpoint loop never terminated)."""
+    rng = np.random.RandomState(8)
+    inp = Input(Array2d(UInt(8), 24, 16), "x")
+    idn = Downsample(2, 2)(Upsample(2, 2)(inp))
+    k = np.outer([1, 2, 1], [1, 3, 1]).astype(np.int64)
+    st = Stencil(-2, 0, -2, 0)(idn)
+    out = Reduce(AddAsync)(Map(AddMSBs(16))(
+        Map(Mul)(st, Const(Array2d(UInt(8), 3, 3), k))))
+    lp = lower_pipeline(out, backend=backend)     # regression: used to hang
+    assert lp.graph_rewrites == 1, lp.notes
+    assert [d.kernel for d in lp.fusions.values()] == ["separable_conv"]
+    x = rng.randint(0, 256, (16, 24)).astype(np.int64)
+    assert _eq(evaluate(out, {"x": x}), lp({"x": x}))
+
+
+def test_down_up_identity_collapses_and_up_down_does_not():
     rng = np.random.RandomState(9)
     inp = Input(Array2d(UInt(8), 16, 12), "x")
-    k = rng.randint(0, 16, (3, 3)).astype(np.int64)
-    g = Pad(2, 1, 1, 2)(inp)
-    st = Stencil(-1, 1, -1, 1)(g)          # centered window
-    prod = Map(Mul)(st, Const(Array2d(UInt(8), 3, 3), k))
-    s = Reduce(AddAsync)(Map(AddMSBs(8))(prod))
-    c = Crop(1, 1, 1, 1)(s)
-    out = Upsample(2, 2)(Downsample(2, 2)(c))
-    lp = lower_pipeline(out, backend=backend)
     x = rng.randint(0, 256, (12, 16)).astype(np.int64)
+
+    idn = Downsample(2, 2)(Upsample(2, 2)(inp))   # identity
+    out = Map(AbsDiff)(inp, idn)
+    lp = lower_pipeline(out, backend="jax")
+    assert lp.graph_rewrites == 1, lp.notes
     assert _eq(evaluate(out, {"x": x}), lp({"x": x}))
+
+    nid = Upsample(2, 2)(Downsample(2, 2)(inp))   # NOT an identity
+    lp2 = lower_pipeline(nid, backend="jax")
+    assert lp2.graph_rewrites == 0
+    assert _eq(evaluate(nid, {"x": x}), lp2({"x": x}))
+
+
+# ---- External ops through pure_callback (jit + run_batch) ----
+
+@pytest.mark.parametrize("bits", [10, 40])
+def test_external_traces_under_jit_and_run_batch(bits):
+    """External numpy models lower through jax.pure_callback with declared
+    result shapes/dtypes (x64-proof transport), so they work under the jit
+    engine and under vmapped run_batch — narrow and wide carriers."""
+    rng = np.random.RandomState(2)
+    inp = Input(Array2d(UInt(8), 24, 16), "x")
+
+    def ext_fn(a):
+        return np.asarray(a) * 1234567 + 3
+
+    e = External("aff", Array2d(UInt(bits), 24, 16), ext_fn, inp)
+    out = Map(AddMSBs(2))(e)
+    lp = lower_pipeline(out, backend="jax")
+    x = rng.randint(0, 256, (16, 24)).astype(np.int64)
+    assert _eq(evaluate(out, {"x": x}), lp({"x": x}))
+    xb = rng.randint(0, 256, (3, 16, 24)).astype(np.int64)
+    ref_b = np.stack([evaluate(out, {"x": xb[i]}) for i in range(3)])
+    assert _eq(ref_b, lp.run_batch({"x": xb}))
+
+
+def test_run_batch_const_across_segment_boundary():
+    """A const-derived value exported from a vmapped program segment gets
+    broadcast onto the frame axis (vmap out_axes=0); the next segment must
+    treat it as batched. Regression: ToFloat -> FloatMul -> FloatSub(., C)
+    splits at the f32 mul->sub boundary with the Const crossing it."""
+    from repro.core import Float, FloatMul, FloatSub, ToFloat
+    rng = np.random.RandomState(6)
+    inp = Input(Array2d(UInt(8), 8, 6), "x")
+    sq = Map(FloatMul)(Map(ToFloat)(inp), Map(ToFloat)(inp))
+    out = Map(FloatSub)(sq, Const(Float(8, 24), np.float32(3.5)))
+    lp = lower_pipeline(out, backend="jax")
+    assert len(lp._plan) > 1          # the FMA rule actually split here
+    xb = rng.randint(0, 256, (3, 6, 8)).astype(np.int64)
+    ref = np.stack([evaluate(out, {"x": xb[i]}) for i in range(3)])
+    got = lp.run_batch({"x": xb})
+    assert got.shape == ref.shape
+    assert _eq(ref, got)
+
+
+# ---- engine surface: debug path, cache stats, report ----
+
+def test_debug_path_and_node_values():
+    rng = np.random.RandomState(4)
+    inp = Input(Array2d(UInt(8), 12, 8), "x")
+    out = Map(Abs)(Map(Sub)(inp, Map(Rshift(1))(inp)))
+    lp = lower_pipeline(out, backend="jax", debug=True)
+    x = rng.randint(0, 256, (8, 12)).astype(np.int64)
+    assert _eq(evaluate(out, {"x": x}), lp({"x": x}))
+    vals = lp.node_values({"x": x})
+    assert set(vals) == {n.uid for n in lp.ir.order}
+    assert _eq(vals[out.uid], evaluate(out, {"x": x}))
+
+
+def test_jit_cache_stats_and_design_report(lowering_cases):
+    design, inputs_fn = lowering_cases["convolution"]
+    lp = design.lower("pallas")
+    inp = inputs_fn(np.random.RandomState(11))
+    design.run(inp, backend="pallas")
+    design.run(inp, backend="pallas")
+    stats = "\n".join(lp.cache_stats())
+    assert "jit[frame]" in stats
+    report = design.report()
+    assert "kernels/conv2d" in report          # fused-dispatch note
+    assert "jit[frame]" in report              # per-signature cache stats
 
 
 # ---- property-style randomized DAGs over the point-op vocabulary ----
@@ -142,3 +376,21 @@ def test_random_pointop_dags_cross_backend(seed):
     for backend in BACKENDS:
         assert _eq(ref, lower_pipeline(out, backend=backend)(inputs)), \
             (seed, backend)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_structural_ops_cross_backend(backend):
+    """Pad / centered Stencil / Crop / Downsample / Upsample — the
+    geometry ops, in a shape the kernel fusion matchers must not claim."""
+    rng = np.random.RandomState(9)
+    inp = Input(Array2d(UInt(8), 16, 12), "x")
+    k = rng.randint(0, 16, (3, 3)).astype(np.int64)
+    g = Pad(2, 1, 1, 2)(inp)
+    st = Stencil(-1, 1, -1, 1)(g)          # centered window
+    prod = Map(Mul)(st, Const(Array2d(UInt(8), 3, 3), k))
+    s = Reduce(AddAsync)(Map(AddMSBs(8))(prod))
+    c = Crop(1, 1, 1, 1)(s)
+    out = Upsample(2, 2)(Downsample(2, 2)(c))
+    lp = lower_pipeline(out, backend=backend)
+    x = rng.randint(0, 256, (12, 16)).astype(np.int64)
+    assert _eq(evaluate(out, {"x": x}), lp({"x": x}))

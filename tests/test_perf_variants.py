@@ -12,7 +12,6 @@ import textwrap
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.configs import ARCHS, reduced
 from repro.models import build_forward, init_params

@@ -4,9 +4,8 @@ import numpy as np
 import pytest
 from fractions import Fraction
 
-from repro.apps import Convolution, Stereo, golden_convolution, golden_stereo
+from repro.apps import Convolution, Stereo, golden_convolution
 from repro.core import compile_pipeline
-from repro.core.executor import evaluate
 
 
 # paper fig. 9: CONVOLUTION at each throughput -> (T_eff, cycles)
