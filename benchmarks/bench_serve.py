@@ -1,0 +1,129 @@
+"""Serving throughput/latency benchmark for the four paper apps.
+
+Baselines and measurement, per app (small bench_case sizes shared with
+bench_lowering):
+
+  seq_run      sequential warm ``design.run(frame)`` calls — the default
+               (numpy-executor) one-shot path users get out of the box;
+               its outputs double as the bit-exactness reference
+  seq_jax      sequential warm ``design.run(frame, backend="jax")`` calls
+               (per-frame jit dispatch, no batching)
+  serve        ``design.serve()``: N frames pushed through the micro-
+               batcher + double-buffered sharded dispatcher; wall clock
+               from first submit to last result, per-frame latency
+               p50/p99 from ServeStats
+
+``write_json`` merge-updates ``apps[name]["serve"]`` into
+BENCH_kernels.json so kernel rows and serve rows coexist; the acceptance
+metric is ``throughput_x_vs_run`` (>= 2x on all four paper apps).
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.bench_lowering import SIZES
+
+N_FRAMES = 32
+MAX_BATCH = 8
+BACKEND = "pallas"      # fused-kernel dispatch: the serving backend
+PAPER_APPS = ("convolution", "stereo", "flow", "descriptor")
+
+_memo = None
+
+
+def _frames(inputs_fn, n):
+    return [inputs_fn(np.random.RandomState(i)) for i in range(n)]
+
+
+def _eq(a, b):
+    if isinstance(a, tuple):
+        return len(a) == len(b) and all(_eq(x, y) for x, y in zip(a, b))
+    return np.array_equal(np.asarray(a), np.asarray(b))
+
+
+def bench_serving():
+    global _memo
+    if _memo is not None:
+        return _memo
+    from repro.apps import BENCH_CASES
+    from repro.core import compile_pipeline
+    out = {}
+    for name in PAPER_APPS:
+        uf, inputs_fn = BENCH_CASES[name](**SIZES.get(name, {}))
+        design = compile_pipeline(uf)
+        frames = _frames(inputs_fn, N_FRAMES)
+
+        # sequential numpy run(): timing + the bit-exactness reference
+        design.run(frames[0])                       # warm any lazy state
+        t0 = time.perf_counter()
+        expected = [design.run(f) for f in frames]
+        seq_run_s = time.perf_counter() - t0
+
+        # sequential per-frame jax run(): warm the signature first
+        design.run(frames[0], backend="jax")
+        t0 = time.perf_counter()
+        for f in frames:
+            design.run(f, backend="jax")
+        seq_jax_s = time.perf_counter() - t0
+
+        with design.serve(backend=BACKEND, max_batch=MAX_BATCH,
+                          max_delay_ms=20.0) as srv:
+            srv.warmup(frames[0])                   # compile the batch path
+            srv.stats.latencies.clear()
+            t0 = time.perf_counter()
+            futs = srv.submit_many(frames)
+            outs = [f.result(timeout=600) for f in futs]
+            serve_s = time.perf_counter() - t0
+            q = srv.stats.latency_quantiles()
+            stats = srv.stats
+
+        bit_exact = all(_eq(o, e) for o, e in zip(outs, expected))
+        out[name] = {
+            "frames": N_FRAMES,
+            "max_batch": MAX_BATCH,
+            "backend": BACKEND,
+            "bit_exact_vs_numpy": bit_exact,
+            "seq_run_us_per_frame": round(seq_run_s / N_FRAMES * 1e6),
+            "seq_jax_us_per_frame": round(seq_jax_s / N_FRAMES * 1e6),
+            "serve_us_per_frame": round(serve_s / N_FRAMES * 1e6),
+            "serve_fps": round(N_FRAMES / serve_s, 1),
+            "latency_p50_us": round(q["p50"] * 1e6),
+            "latency_p99_us": round(q["p99"] * 1e6),
+            "batches": stats.batches,
+            "throughput_x_vs_run": round(seq_run_s / serve_s, 3),
+            "throughput_x_vs_jax_run": round(seq_jax_s / serve_s, 3),
+        }
+    _memo = out
+    return out
+
+
+def write_json(path: str = "BENCH_kernels.json") -> dict:
+    from benchmarks.json_util import merge_json
+    # correctness is deterministic (unlike throughput): a non-bit-exact
+    # serving path must fail the CI bench step, not just record False
+    broken = [n for n, r in bench_serving().items()
+              if not r["bit_exact_vs_numpy"]]
+    if broken:
+        raise RuntimeError(
+            f"serve outputs not bit-exact vs numpy executor: {broken}")
+    return merge_json(path, {
+        "serve_note": (f"{N_FRAMES} frames through HWDesign.serve() "
+                       f"(max_batch={MAX_BATCH}, {BACKEND} backend, warm) vs "
+                       "sequential run(); latency is end-to-end per frame"),
+        "apps": {name: {"serve": row}
+                 for name, row in bench_serving().items()},
+    })
+
+
+def run(csv_rows):
+    for name, row in bench_serving().items():
+        csv_rows.append((f"serve_{name}",
+                         f"{row['serve_us_per_frame']}",
+                         f"x_vs_run={row['throughput_x_vs_run']},"
+                         f"x_vs_jax={row['throughput_x_vs_jax_run']},"
+                         f"p50_us={row['latency_p50_us']},"
+                         f"p99_us={row['latency_p99_us']},"
+                         f"bit_exact={row['bit_exact_vs_numpy']}"))
+    return csv_rows

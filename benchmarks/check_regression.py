@@ -1,0 +1,92 @@
+"""CI bench-regression gate.
+
+Compares a fresh ``benchmarks/run.py --json`` result against the committed
+baseline (``git show HEAD:BENCH_kernels.json`` by default, so it works
+even after the fresh run has merge-updated the working-tree file) and
+fails when any app's warm ``speedup_jax_vs_numpy`` regressed by more than
+``--threshold`` (default 25%).
+
+    PYTHONPATH=src python -m benchmarks.check_regression \
+        --fresh BENCH_kernels.json [--baseline git|PATH] [--threshold 0.25]
+
+Exit status 1 on regression — wired into the tier1 CI job after the
+artifact upload.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import subprocess
+import sys
+from typing import Any, Dict, List, Tuple
+
+METRIC = "speedup_jax_vs_numpy"
+
+
+def load_baseline(spec: str) -> Dict[str, Any]:
+    """``git`` -> the HEAD-committed BENCH_kernels.json; else a file path."""
+    if spec == "git":
+        out = subprocess.run(
+            ["git", "show", "HEAD:BENCH_kernels.json"],
+            capture_output=True, text=True, check=True)
+        return json.loads(out.stdout)
+    with open(spec) as f:
+        return json.load(f)
+
+
+def find_regressions(base: Dict[str, Any], fresh: Dict[str, Any],
+                     threshold: float, metric: str = METRIC
+                     ) -> Tuple[List[str], List[str]]:
+    """Returns (report_rows, regressed_app_names).  An app regresses when
+    its fresh metric drops below (1 - threshold) x baseline; apps missing
+    from either side are reported but never fail the gate (new apps land
+    without baselines)."""
+    rows, bad = [], []
+    base_apps = base.get("apps", {})
+    fresh_apps = fresh.get("apps", {})
+    for app in sorted(set(base_apps) | set(fresh_apps)):
+        b = base_apps.get(app, {}).get(metric)
+        f = fresh_apps.get(app, {}).get(metric)
+        if b is None or f is None:
+            rows.append(f"{app:14s} {metric}: baseline={b} fresh={f} "
+                        "(skipped: missing side)")
+            continue
+        floor = b * (1.0 - threshold)
+        verdict = "OK" if f >= floor else "REGRESSED"
+        rows.append(f"{app:14s} {metric}: baseline={b:.3f} fresh={f:.3f} "
+                    f"floor={floor:.3f} {verdict}")
+        if f < floor:
+            bad.append(app)
+    return rows, bad
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fresh", default="BENCH_kernels.json",
+                    help="fresh run output (merge-updated working tree file)")
+    ap.add_argument("--baseline", default="git",
+                    help='"git" (HEAD-committed file) or a path')
+    ap.add_argument("--threshold", type=float, default=0.25,
+                    help="max allowed fractional drop (0.25 = 25%%)")
+    ap.add_argument("--metric", default=METRIC)
+    args = ap.parse_args()
+    base = load_baseline(args.baseline)
+    with open(args.fresh) as f:
+        fresh = json.load(f)
+    rows, bad = find_regressions(base, fresh, args.threshold, args.metric)
+    for v_name, doc in (("baseline", base), ("fresh", fresh)):
+        vs = doc.get("versions")
+        if vs:
+            print(f"# {v_name} versions: " +
+                  " ".join(f"{k}={v}" for k, v in sorted(vs.items())))
+    print("\n".join(rows))
+    if bad:
+        print(f"FAIL: {len(bad)} app(s) regressed >"
+              f"{args.threshold:.0%}: {', '.join(bad)}")
+        return 1
+    print("bench-regression gate: OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,54 @@
+"""Merge-update helpers for BENCH_kernels.json.
+
+``benchmarks/run.py --json`` used to rewrite the file wholesale, so a run
+that produced only kernel metrics would drop previously committed serve
+metrics (and vice versa).  ``merge_json`` deep-merges new rows into the
+existing document per app/backend key and stamps the interpreter/library
+versions the numbers were measured with — the bench-regression gate
+(check_regression.py) uses the stamp to annotate its report.
+"""
+from __future__ import annotations
+
+import json
+import os
+import platform
+from typing import Any, Dict
+
+
+def _deep_merge(base: Dict[str, Any], new: Dict[str, Any]) -> Dict[str, Any]:
+    """Recursively merge ``new`` into ``base`` (new wins on leaves)."""
+    out = dict(base)
+    for k, v in new.items():
+        if isinstance(v, dict) and isinstance(out.get(k), dict):
+            out[k] = _deep_merge(out[k], v)
+        else:
+            out[k] = v
+    return out
+
+
+def version_stamp() -> Dict[str, str]:
+    import jax
+    import numpy as np
+    return {
+        "python": platform.python_version(),
+        "jax": jax.__version__,
+        "numpy": np.__version__,
+    }
+
+
+def merge_json(path: str, updates: Dict[str, Any]) -> Dict[str, Any]:
+    """Merge ``updates`` into the JSON document at ``path`` (created if
+    missing), stamp versions, write back, return the merged document."""
+    doc: Dict[str, Any] = {}
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                doc = json.load(f)
+        except (OSError, json.JSONDecodeError):
+            doc = {}
+    doc = _deep_merge(doc, updates)
+    doc["versions"] = version_stamp()
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=2, sort_keys=True)
+        f.write("\n")
+    return doc

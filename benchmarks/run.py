@@ -1,7 +1,10 @@
 # One function per paper table. Print ``name,us_per_call,derived`` CSV.
-# ``--json`` additionally writes BENCH_kernels.json (numpy executor vs
-# lowering-compiler backends, cold vs warm, per-backend fusion counts —
-# benchmarks/bench_lowering.py).
+# ``--json`` additionally merge-updates BENCH_kernels.json (numpy executor
+# vs lowering-compiler backends cold/warm + per-backend fusion counts from
+# benchmarks/bench_lowering.py, serving throughput/latency from
+# benchmarks/bench_serve.py) per app/backend — existing rows from other
+# producers survive — and stamps the python/jax/numpy versions for the
+# bench-regression gate (benchmarks/check_regression.py).
 from __future__ import annotations
 
 import argparse
@@ -11,10 +14,11 @@ import sys
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--json", action="store_true",
-                    help="write BENCH_kernels.json (backend wall times)")
+                    help="merge-update BENCH_kernels.json (backend wall "
+                         "times + serve metrics, version-stamped)")
     args = ap.parse_args()
     from benchmarks import (bench_fifo, bench_hls_analog, bench_kernels,
-                            bench_lowering, bench_roofline,
+                            bench_lowering, bench_roofline, bench_serve,
                             bench_schedule_range)
     rows = []
     benches = [
@@ -23,6 +27,7 @@ def main() -> None:
         ("hls analog (paper §7.4)", bench_hls_analog.run),
         ("kernels", bench_kernels.run),
         ("lowering backends", bench_lowering.run),
+        ("serve throughput/latency", bench_serve.run),
         ("roofline (dry-run artifacts)", bench_roofline.run),
     ]
     for name, fn in benches:
@@ -31,15 +36,23 @@ def main() -> None:
             fn(rows)
         except Exception as e:  # keep the harness going; report the failure
             rows.append((f"FAILED_{name.split()[0]}", "0", repr(e)[:200]))
+    json_failed = False
     if args.json:
         print("# writing BENCH_kernels.json", file=sys.stderr, flush=True)
-        try:
-            bench_lowering.write_json("BENCH_kernels.json")
-        except Exception as e:  # don't lose the CSV over a write failure
-            rows.append(("FAILED_json", "0", repr(e)[:200]))
+        for writer in (bench_lowering.write_json, bench_serve.write_json):
+            try:
+                writer("BENCH_kernels.json")
+            except Exception as e:  # don't lose the CSV over a write failure
+                rows.append(("FAILED_json", "0", repr(e)[:200]))
+                json_failed = True
     print("name,us_per_call,derived")
     for r in rows:
         print(",".join(str(x) for x in r))
+    if json_failed:
+        # a stale BENCH_kernels.json would make the CI regression gate
+        # compare the committed baseline against itself (vacuous pass):
+        # surface the writer failure as a failed bench step instead
+        sys.exit(1)
 
 
 if __name__ == '__main__':

@@ -1,0 +1,74 @@
+"""CI serve-smoke: boot the frame server in-process, push 64 mixed-
+signature frames through two apps on ONE server, assert every response is
+bit-exact vs the numpy executor.
+
+Mixed signatures come from two axes: two different apps (convolution and
+stereo, registered on the same server so the batcher must separate them)
+and two frame sizes per app (the compiled executable is shape-polymorphic,
+so one design legitimately serves several resolutions — each lands in its
+own jit-cache bucket).  Frames are interleaved round-robin to maximize
+bucket churn.
+
+    PYTHONPATH=src python -m benchmarks.serve_smoke
+"""
+from __future__ import annotations
+
+import sys
+
+import numpy as np
+
+N_FRAMES = 64
+
+
+def _mixed_frames():
+    """64 (app, inputs) pairs cycling through 4 signatures."""
+    rng = np.random.RandomState(7)
+    makers = []
+    for h in (40, 56):                       # two sizes per app
+        makers.append(("convolution", lambda h=h: {
+            "convolution.in": rng.randint(0, 256, (h, 96)).astype(np.int64)}))
+    for h in (24, 32):
+        def mk(h=h):
+            left = rng.randint(0, 256, (h, 64)).astype(np.int64)
+            return {"stereo.in": (left, np.roll(left, 3, axis=-1))}
+        makers.append(("stereo", mk))
+    return [(makers[i % 4][0], makers[i % 4][1]()) for i in range(N_FRAMES)]
+
+
+def main() -> int:
+    from repro.apps import BENCH_CASES
+    from repro.core import compile_pipeline
+    from repro.core.executor import evaluate
+    from repro.serve import FrameServer
+
+    designs = {}
+    for app in ("convolution", "stereo"):
+        uf, _ = BENCH_CASES[app]()
+        designs[app] = compile_pipeline(uf)
+
+    frames = _mixed_frames()
+    with FrameServer(max_batch=8, max_delay_ms=5.0) as srv:
+        for app, d in designs.items():
+            srv.register(d, name=app)
+        futs = [(app, inp, srv.submit(inp, app=app)) for app, inp in frames]
+        results = [(app, inp, f.result(timeout=600)) for app, inp, f in futs]
+        stats_lines = srv.stats.report_lines()
+
+    bad = 0
+    for app, inp, out in results:
+        ref = evaluate(designs[app].out_val, inp)
+        if not np.array_equal(np.asarray(out), ref):
+            print(f"MISMATCH: app={app}", file=sys.stderr)
+            bad += 1
+    for ln in stats_lines:
+        print(f"# {ln}")
+    if bad:
+        print(f"serve-smoke FAILED: {bad}/{N_FRAMES} mismatches")
+        return 1
+    print(f"serve-smoke OK: {N_FRAMES} mixed-signature frames over "
+          f"{len(designs)} apps, all bit-exact vs numpy executor")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -43,6 +43,7 @@ class HWDesign:
     notes: List[str] = field(default_factory=list)
     backend: str = "numpy"            # default run() backend
     _lowered: Dict[str, Any] = field(default_factory=dict, repr=False)
+    _serve_stats: List[Any] = field(default_factory=list, repr=False)
 
     # ---- reports ----
     @property
@@ -146,6 +147,35 @@ class HWDesign:
                          for j in range(len(outs[0])))
         return np.stack(outs)
 
+    def serve(self, backend: Optional[str] = None, **config):
+        """Boot a streaming frame server (repro/serve/) for this design and
+        return the started server: an asyncio micro-batcher buckets frames
+        by input signature, stacks them to a size/deadline budget, and
+        dispatches double-buffered batches through the lowering engine with
+        the frame axis sharded across available devices.  Use as a context
+        manager::
+
+            with design.serve(max_batch=8) as srv:
+                fut = srv.submit({"convolution.in": frame})
+                out = fut.result()
+
+        ``backend`` defaults to the design's backend, or "jax" when that is
+        "numpy" (serving batches through the jit engine).  ``config`` is
+        forwarded to ``ServeConfig`` (max_batch, max_delay_ms, max_queue,
+        depth, donate, ...).  The most recent server's stats feed back
+        into ``report()`` (only the latest is kept: each ServeStats holds
+        a latency reservoir, so unbounded accumulation across repeated
+        serve sessions would leak)."""
+        from ..serve import FrameServer  # lazy: keep numpy-only flows light
+        b = backend or self.backend
+        if b == "numpy":
+            b = "jax"
+        srv = FrameServer(**config)
+        srv.register(self, backend=b)
+        self._serve_stats[:] = [srv.stats]
+        srv.start()
+        return srv
+
     def lowering_report(self) -> str:
         """Fused-dispatch notes and per-signature jit cache stats for every
         instantiated lowering backend (empty until ``lower()``/``run`` with
@@ -171,6 +201,9 @@ class HWDesign:
             lines.append(f"  [{i:3d}] s={s:6d} {m!r}")
         if self._lowered:
             lines.append(self.lowering_report())
+        for st in self._serve_stats:
+            lines.append(" -- serve --")
+            lines.extend(f"  {ln}" for ln in st.report_lines())
         return "\n".join(lines)
 
 

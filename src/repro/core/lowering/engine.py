@@ -51,6 +51,8 @@ def _to_numpy(r):
 def _spec(v) -> Any:
     if isinstance(v, tuple):
         return tuple(_spec(e) for e in v)
+    if hasattr(v, "shape") and hasattr(v, "dtype"):
+        return (tuple(v.shape), str(v.dtype))   # metadata only: no host sync
     a = np.asarray(v)
     return (a.shape, str(a.dtype))
 
@@ -120,6 +122,10 @@ class _Task:
         self.nodes = nodes
         self.in_uids = in_uids
         self.out_uids = out_uids
+        # indices into in_uids whose values die after this task (filled by
+        # the planner's liveness pass): the donate-able batched call path
+        # hands these buffers back to XLA for reuse
+        self.dead_in: Tuple[int, ...] = ()
         self._jit: Dict[str, Any] = {}
 
     def _fn(self, *invals):
@@ -128,14 +134,16 @@ class _Task:
             env[n.uid] = _eval_node(n, env)
         return tuple(env[u] for u in self.out_uids)
 
-    def call(self, mode: str, invals, in_axes):
+    def call(self, mode: str, invals, in_axes, donate: bool = False):
         if mode == "batch" and not any(a == 0 for a in in_axes):
             mode = "frame"              # constant subgraph: no frame axis
-        key = mode if mode == "frame" else ("batch", in_axes)
+        donate_idx = self.dead_in if (donate and mode == "batch") else ()
+        key = (mode, donate_idx) if mode == "frame" \
+            else ("batch", in_axes, donate_idx)
         if key not in self._jit:
             fn = self._fn if mode == "frame" else jax.vmap(self._fn,
                                                            in_axes=in_axes)
-            self._jit[key] = jax.jit(fn)
+            self._jit[key] = jax.jit(fn, donate_argnums=donate_idx)
         return self._jit[key](*invals)
 
 
@@ -208,6 +216,14 @@ class CompiledPipeline:
                 if n.uid == self.ir.root
                 or any(c not in produced for c in n.consumers))
             tasks.append(_Task(nodes, tuple(in_uids), out_uids))
+
+        # liveness: an input value dies at its last consuming task (and is
+        # not the pipeline root) — those buffers are safe to donate on the
+        # batched serving path, letting XLA reuse them for outputs
+        for i, t in enumerate(tasks):
+            live_later = {u for lt in tasks[i + 1:] for u in lt.in_uids}
+            t.dead_in = tuple(j for j, u in enumerate(t.in_uids)
+                              if u not in live_later and u != self.ir.root)
         return tasks
 
     # ---- execution ----
@@ -219,7 +235,7 @@ class CompiledPipeline:
             else:
                 env[n.uid] = jnp.asarray(raw)
 
-    def _run(self, inputs: Dict[str, Any], mode: str):
+    def _run(self, inputs: Dict[str, Any], mode: str, donate: bool = False):
         env: Dict[int, Any] = {}
         self._load_inputs(inputs, env)
         # batch mode: inputs carry the frame axis; a vmapped task broadcasts
@@ -230,7 +246,8 @@ class CompiledPipeline:
         for t in self._plan:
             axes = tuple(0 if batched.get(u, False) else None
                          for u in t.in_uids)
-            outs = t.call(mode, [env[u] for u in t.in_uids], axes)
+            outs = t.call(mode, [env[u] for u in t.in_uids], axes,
+                          donate=donate)
             env.update(zip(t.out_uids, outs))
             vmapped = mode == "batch" and any(a == 0 for a in axes)
             for u in t.out_uids:
@@ -247,7 +264,7 @@ class CompiledPipeline:
         return env[self.ir.root]
 
     def _record(self, inputs, mode: str) -> None:
-        sig = (mode, tuple(sorted((k, _spec(v)) for k, v in inputs.items())))
+        sig = (mode, self.frame_signature(inputs))
         self.signatures[sig] = self.signatures.get(sig, 0) + 1
 
     def __call__(self, inputs: Dict[str, Any]):
@@ -265,6 +282,27 @@ class CompiledPipeline:
                 return _to_numpy(jax.vmap(self._eval)(inputs))
             self._record(inputs, "batch")
             return _to_numpy(self._run(inputs, "batch"))
+
+    def run_batch_device(self, inputs: Dict[str, Any], donate: bool = False):
+        """The serving call path: batched execution that keeps results on
+        device (jax arrays, asynchronously dispatched — no host sync), so a
+        caller can overlap host→device transfer of the next batch with this
+        batch's compute before converging on the result.  ``donate=True``
+        additionally donates each segment's dead input buffers to XLA
+        (frame buffers are single-use in a server, so their pages can be
+        reused for outputs; a no-op where the platform lacks donation).
+        Callers must not reuse donated input arrays afterwards."""
+        with enable_x64():
+            self._record(inputs, "serve")
+            return self._run(inputs, "batch", donate=donate)
+
+    @staticmethod
+    def frame_signature(inputs: Dict[str, Any]) -> Tuple:
+        """Hashable per-frame (shape, dtype) signature of an input dict —
+        the micro-batcher's bucketing key: frames sharing a signature stack
+        into one batch whose jit-cache entry is shared by every equal-sized
+        batch at that signature."""
+        return tuple(sorted((k, _spec(v)) for k, v in inputs.items()))
 
     def node_values(self, inputs: Dict[str, Any]) -> Dict[int, Any]:
         """Eager per-node evaluation returning every live node's value

@@ -1,0 +1,19 @@
+"""Batched streaming frame server over compiled HWTool pipelines.
+
+The paper's hardware serves continuous pixel streams at line rate; this
+package is the software serving layer over the lowering compiler
+(core/lowering/): an asyncio server (server.py) feeds a dynamic
+micro-batcher (batcher.py) that buckets frames by input signature so every
+stacked batch hits the engine's per-signature jit cache, dispatches
+through a double-buffered executor (dispatch.py) overlapping transfer of
+batch N+1 with compute of batch N, and shards the stacked frame axis
+across available devices (sharding.py) with a transparent single-device
+fallback.  Entry points: ``HWDesign.serve(...)`` or ``serve_design``.
+"""
+from .batcher import (FrameRequest, MicroBatcher,  # noqa: F401
+                      frame_signature, split_frames, stack_frames)
+from .dispatch import BatchDispatcher, InflightBatch  # noqa: F401
+from .server import (FrameServer, ServeConfig, ServeStats,  # noqa: F401
+                     serve_design)
+from .sharding import (device_put_batch, frame_sharding,  # noqa: F401
+                       pad_frames)

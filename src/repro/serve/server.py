@@ -1,0 +1,345 @@
+"""The asyncio frame server.
+
+Request path::
+
+    submit(frame) ──bounded queue──▶ scheduler ──▶ MicroBatcher buckets
+        (backpressure)                 │             by (app, signature)
+                                       ▼ size / deadline flush
+                         BatchDispatcher.submit (transfer + compute,
+                                       │          async, frame-sharded)
+                         bounded inflight FIFO (depth: double buffering)
+                                       ▼ readback in executor thread
+                         per-frame futures resolved, latency recorded
+
+The server owns a background thread running the event loop, so synchronous
+callers (tests, benchmarks, request handlers) just call ``submit`` and get
+a ``concurrent.futures.Future``.  Both FIFOs are bounded — the request
+queue (``max_queue``) and the inflight pipeline (``depth``) — and their
+occupancy is accounted in ``ServeStats``, the serving-layer mirror of the
+paper's FIFO-allocation story (compile.py surfaces it via
+``HWDesign.report()``).
+"""
+from __future__ import annotations
+
+import asyncio
+import collections
+import concurrent.futures
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional
+
+from .batcher import (FrameRequest, MicroBatcher, frame_signature,
+                      next_pow2)
+from .dispatch import BatchDispatcher
+from .sharding import frame_sharding
+
+
+@dataclass
+class ServeConfig:
+    max_batch: int = 8            # size flush threshold per bucket
+    max_delay_ms: float = 2.0     # deadline flush for partial buckets
+    max_queue: int = 256          # request FIFO bound (submit backpressure)
+    depth: int = 2                # inflight batch FIFO bound (double buffer)
+    donate: bool = False          # donate dead buffers on the batched path
+    pad_pow2: bool = True         # pad partial batches to pow2 jit buckets
+    devices: Optional[list] = None  # frame-axis shard targets (None = all)
+
+    def __post_init__(self):
+        if self.max_batch < 1 or self.depth < 1 or self.max_queue < 1:
+            raise ValueError("max_batch, depth, and max_queue must be >= 1")
+        if self.max_delay_ms <= 0:
+            raise ValueError("max_delay_ms must be > 0")
+
+
+@dataclass
+class ServeStats:
+    """Counters + latency reservoir for one server (updated on the loop
+    thread; read from anywhere)."""
+    frames_in: int = 0
+    frames_out: int = 0
+    batches: int = 0
+    size_flushes: int = 0
+    deadline_flushes: int = 0
+    padded_frames: int = 0
+    queue_hw: int = 0             # request FIFO high-water
+    bucket_hw: int = 0            # batcher bucket-occupancy high-water
+    inflight_hw: int = 0          # compute FIFO high-water
+    batch_frames: int = 0
+    max_batch_seen: int = 0
+    devices: int = 1
+    latencies: collections.deque = field(
+        default_factory=lambda: collections.deque(maxlen=8192))
+
+    def latency_quantiles(self) -> Dict[str, float]:
+        """p50/p99 end-to-end frame latency in seconds (0.0 if idle)."""
+        # deque.copy() is a single C call (GIL-atomic), safe against the
+        # loop thread appending concurrently; iterating directly is not
+        xs = sorted(self.latencies.copy())
+        if not xs:
+            return {"p50": 0.0, "p99": 0.0}
+        pick = lambda q: xs[min(len(xs) - 1, int(q * len(xs)))]
+        return {"p50": pick(0.50), "p99": pick(0.99)}
+
+    def report_lines(self) -> List[str]:
+        q = self.latency_quantiles()
+        mean_b = self.batch_frames / self.batches if self.batches else 0.0
+        return [
+            f"frames in={self.frames_in} out={self.frames_out} "
+            f"devices={self.devices}",
+            f"batches={self.batches} (size={self.size_flushes} "
+            f"deadline={self.deadline_flushes}) mean_batch={mean_b:.2f} "
+            f"max_batch={self.max_batch_seen} "
+            f"padded_frames={self.padded_frames}",
+            f"fifo occupancy: request hw={self.queue_hw} "
+            f"bucket hw={self.bucket_hw} inflight hw={self.inflight_hw}",
+            f"latency p50={q['p50'] * 1e3:.2f}ms p99={q['p99'] * 1e3:.2f}ms",
+        ]
+
+
+class _App:
+    def __init__(self, design, compiled, dispatcher):
+        self.design = design
+        self.compiled = compiled
+        self.dispatcher = dispatcher
+
+
+_STOP = object()
+
+
+class FrameServer:
+    """Batched streaming frame server over one or more compiled designs."""
+
+    def __init__(self, config: Optional[ServeConfig] = None, **kw):
+        self.config = config or ServeConfig(**kw)
+        self.stats = ServeStats()
+        self._apps: Dict[str, _App] = {}
+        self._default_app: Optional[str] = None
+        self._sharding = frame_sharding(self.config.devices)
+        self.stats.devices = (len(self._sharding.mesh.devices.flat)
+                              if self._sharding is not None else 1)
+        self._loop: Optional[asyncio.AbstractEventLoop] = None
+        self._thread: Optional[threading.Thread] = None
+        self._queue: Optional[asyncio.Queue] = None
+        self._started = threading.Event()
+        self._closed = False
+
+    # ---- setup ----
+    def register(self, design, name: Optional[str] = None,
+                 backend: str = "jax") -> str:
+        """Attach an HWDesign; frames for it are tagged with ``name``
+        (default: the design's name).  The first registered app is the
+        default target of ``submit``."""
+        name = name or design.name
+        compiled = design.lower(backend)
+        self._apps[name] = _App(design, compiled, BatchDispatcher(
+            compiled, self._sharding, donate=self.config.donate))
+        if self._default_app is None:
+            self._default_app = name
+        return name
+
+    def start(self) -> "FrameServer":
+        if self._thread is not None:
+            return self
+        self._thread = threading.Thread(target=self._loop_main,
+                                        name="frame-server", daemon=True)
+        self._thread.start()
+        self._started.wait()
+        return self
+
+    # ---- client surface ----
+    def submit(self, inputs: Dict[str, Any],
+               app: Optional[str] = None) -> concurrent.futures.Future:
+        """Enqueue one frame; returns a Future resolving to its output.
+        Blocks (backpressure) while the request FIFO is full."""
+        if self._closed:
+            raise RuntimeError("server closed")
+        if self._thread is None:
+            raise RuntimeError("server not started")
+        name = app or self._default_app
+        if name not in self._apps:
+            raise KeyError(f"unknown app {name!r}")
+        fut: concurrent.futures.Future = concurrent.futures.Future()
+        req = FrameRequest(name, inputs, frame_signature(inputs),
+                           time.perf_counter(), fut)
+        cf = asyncio.run_coroutine_threadsafe(self._queue.put(req),
+                                              self._loop)
+        # the put blocks while the request FIFO is full (backpressure) —
+        # poll rather than wait unconditionally, because a close() racing
+        # this submit can stop the loop before the scheduled coroutine
+        # runs, in which case cf would never resolve
+        while True:
+            try:
+                cf.result(timeout=0.1)
+                return fut
+            except concurrent.futures.TimeoutError:
+                if self._loop.is_closed():
+                    cf.cancel()
+                    raise RuntimeError("server closed") from None
+
+    def submit_many(self, frames, app: Optional[str] = None
+                    ) -> List[concurrent.futures.Future]:
+        return [self.submit(f, app=app) for f in frames]
+
+    def warmup(self, inputs: Dict[str, Any],
+               app: Optional[str] = None) -> None:
+        """Pre-compile the batched programs for this input signature at
+        every batch size traffic can produce (the pow2 padding buckets up
+        to ``max_batch``), synchronously through the dispatcher — so live
+        traffic never pays an XLA compile."""
+        name = app or self._default_app
+        a = self._apps[name]
+        if self.config.pad_pow2:
+            sizes = sorted({min(next_pow2(s), self.config.max_batch)
+                            for s in range(1, self.config.max_batch + 1)})
+        else:
+            sizes = [self.config.max_batch]
+        sig = frame_signature(inputs)
+        now = time.perf_counter()
+        for s in sizes:
+            reqs = [FrameRequest(name, inputs, sig, now) for _ in range(s)]
+            a.dispatcher.submit(reqs, pad_to=s).wait()
+
+    def close(self) -> None:
+        """Flush pending buckets, drain inflight batches, stop the loop."""
+        if self._thread is None or self._closed:
+            return
+        self._closed = True
+        try:
+            asyncio.run_coroutine_threadsafe(
+                self._queue.put(_STOP), self._loop).result()
+        except RuntimeError:
+            pass                        # scheduler already crashed/stopped
+        self._thread.join()
+        self._thread = None
+
+    def __enter__(self) -> "FrameServer":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    # ---- loop internals ----
+    def _loop_main(self) -> None:
+        self._loop = asyncio.new_event_loop()
+        asyncio.set_event_loop(self._loop)
+        self._queue = asyncio.Queue(maxsize=self.config.max_queue)
+        self._started.set()
+        try:
+            self._loop.run_until_complete(self._scheduler())
+        finally:
+            self._loop.close()
+
+    async def _scheduler(self) -> None:
+        batcher = MicroBatcher(self.config.max_batch,
+                               self.config.max_delay_ms / 1e3,
+                               pad_pow2=self.config.pad_pow2)
+        self._batcher = batcher
+        inflight: collections.deque = collections.deque()
+        try:
+            await self._schedule_loop(batcher, inflight)
+        except Exception as e:
+            # a scheduler crash must not strand clients: fail every
+            # pending future, then let the loop wind down so close()
+            # can join the thread
+            stranded = [r for reqs in batcher.flush_all() for r in reqs]
+            while not self._queue.empty():
+                req = self._queue.get_nowait()
+                if req is not _STOP:
+                    stranded.append(req)
+            for task, handle in inflight:
+                task.cancel()
+                stranded.extend(handle.reqs)
+            for r in stranded:
+                if r.future is not None and not r.future.done():
+                    r.future.set_exception(e)
+            raise
+        else:
+            # clean shutdown: a submit() racing close() may have enqueued
+            # after the _STOP sentinel — fail those futures rather than
+            # leaving their callers blocked forever
+            while not self._queue.empty():
+                req = self._queue.get_nowait()
+                if req is not _STOP and req.future is not None \
+                        and not req.future.done():
+                    req.future.set_exception(RuntimeError("server closed"))
+
+    async def _schedule_loop(self, batcher: MicroBatcher,
+                             inflight: collections.deque) -> None:
+        stop = False
+        while not stop:
+            nd = batcher.next_deadline()
+            timeout = (None if nd is None
+                       else max(0.0, nd - time.perf_counter()))
+            try:
+                req = await asyncio.wait_for(self._queue.get(), timeout)
+            except asyncio.TimeoutError:
+                req = None
+            self.stats.queue_hw = max(self.stats.queue_hw,
+                                      self._queue.qsize() + (req is not None))
+            now = time.perf_counter()
+            ready = []
+            if req is _STOP:
+                stop = True
+                ready = batcher.flush_all()
+            elif req is not None:
+                self.stats.frames_in += 1
+                ready = batcher.add(req, now)
+                self.stats.bucket_hw = batcher.pending_hw
+            ready += batcher.due(now)
+            for reqs in ready:
+                await self._dispatch(reqs, batcher, inflight)
+        while inflight:
+            await inflight.popleft()[0]
+
+    async def _dispatch(self, reqs: List[FrameRequest],
+                        batcher: MicroBatcher,
+                        inflight: collections.deque) -> None:
+        # bound the compute FIFO: at depth, block on the oldest readback
+        # (classic double buffering at depth=2)
+        while len(inflight) >= self.config.depth:
+            await inflight.popleft()[0]
+        app = self._apps[reqs[0].app]
+        pad_to = batcher.pad_target(len(reqs))
+        try:
+            handle = app.dispatcher.submit(reqs, pad_to=pad_to)
+        except Exception as e:                  # bad frame: fail the batch
+            for r in reqs:
+                if r.future is not None and not r.future.done():
+                    r.future.set_exception(e)
+            return
+        self.stats.batches += 1
+        self.stats.batch_frames += len(reqs)
+        self.stats.max_batch_seen = max(self.stats.max_batch_seen, len(reqs))
+        if pad_to:
+            self.stats.padded_frames += max(0, pad_to - len(reqs))
+        self.stats.size_flushes = batcher.size_flushes
+        self.stats.deadline_flushes = batcher.deadline_flushes
+        # the handle rides along so the crash path can fail its requests'
+        # futures if the task is cancelled before _readback resolves them
+        task = asyncio.ensure_future(self._readback(handle))
+        inflight.append((task, handle))
+        self.stats.inflight_hw = max(self.stats.inflight_hw, len(inflight))
+
+    async def _readback(self, handle) -> None:
+        loop = asyncio.get_event_loop()
+        try:
+            outs = await loop.run_in_executor(None, handle.wait)
+        except Exception as e:
+            for r in handle.reqs:
+                if r.future is not None and not r.future.done():
+                    r.future.set_exception(e)
+            return
+        now = time.perf_counter()
+        for r, out in zip(handle.reqs, outs):
+            if r.future is not None:
+                r.future.set_result(out)
+            self.stats.latencies.append(now - r.enqueue_t)
+        self.stats.frames_out += len(handle.reqs)
+
+
+def serve_design(design, backend: str = "jax", **config) -> FrameServer:
+    """One-liner: build, register, and start a server for one design."""
+    srv = FrameServer(**config)
+    srv.register(design, backend=backend)
+    return srv.start()

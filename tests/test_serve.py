@@ -1,0 +1,275 @@
+"""Serving-layer suite: micro-batcher policy (signature bucketing, deadline
+flush), frame-axis sharding fallback, the donate-able batched engine path,
+the live asyncio server (bit-exact round trips over mixed-signature
+traffic on two apps), and the CI bench-regression gate logic."""
+import numpy as np
+import pytest
+
+from repro.core.executor import evaluate
+from repro.serve import (FrameRequest, FrameServer, MicroBatcher,
+                         ServeConfig, device_put_batch, frame_sharding,
+                         frame_signature, pad_frames, split_frames,
+                         stack_frames)
+
+
+def _req(app, inputs, t=0.0):
+    return FrameRequest(app, inputs, frame_signature(inputs), t)
+
+
+def _frame(shape=(8, 6), dtype=np.int64, seed=0):
+    return {"in": np.random.RandomState(seed).randint(
+        0, 100, shape).astype(dtype)}
+
+
+# ---- batcher policy ----
+
+def test_bucketing_never_mixes_shapes_dtypes_or_apps():
+    """Every flushed batch is uniform in (app, signature) no matter how
+    interleaved the arrivals are."""
+    b = MicroBatcher(max_batch=4, max_delay_s=10.0)
+    variants = [("a", (8, 6), np.int64), ("a", (4, 4), np.int64),
+                ("a", (8, 6), np.int32), ("b", (8, 6), np.int64)]
+    batches = []
+    for i in range(40):
+        app, shape, dt = variants[i % 4]
+        batches += b.add(_req(app, _frame(shape, dt, seed=i)), now=0.0)
+    batches += b.flush_all()
+    assert sum(len(r) for r in batches) == 40
+    for reqs in batches:
+        assert len({(r.app, r.signature) for r in reqs}) == 1
+        stacked, n = stack_frames(reqs)         # stackable by construction
+        assert n == len(reqs)
+
+
+def test_size_flush_at_max_batch():
+    b = MicroBatcher(max_batch=3, max_delay_s=10.0)
+    f = _frame()
+    assert b.add(_req("a", f), 0.0) == []
+    assert b.add(_req("a", f), 0.0) == []
+    (reqs,) = b.add(_req("a", f), 0.0)
+    assert len(reqs) == 3 and b.pending == 0 and b.size_flushes == 1
+
+
+def test_deadline_flush_fires_on_partial_batch():
+    """A partial bucket flushes once its oldest frame has waited
+    max_delay_s; the clock is injected so the policy is deterministic."""
+    b = MicroBatcher(max_batch=8, max_delay_s=0.5)
+    f = _frame()
+    b.add(_req("a", f), now=100.0)
+    b.add(_req("a", f), now=100.2)
+    assert b.due(now=100.4) == []               # oldest has waited 0.4 < 0.5
+    assert b.next_deadline() == pytest.approx(100.5)
+    (reqs,) = b.due(now=100.5)
+    assert len(reqs) == 2
+    assert b.deadline_flushes == 1 and b.pending == 0
+    assert b.next_deadline() is None
+
+
+def test_occupancy_high_water_accounting():
+    b = MicroBatcher(max_batch=8, max_delay_s=10.0)
+    for i in range(5):
+        b.add(_req("a", _frame()), 0.0)
+        b.add(_req("b", _frame()), 0.0)
+    assert b.pending == 10 and b.pending_hw == 10
+    b.flush_all()
+    assert b.pending == 0 and b.pending_hw == 10
+
+
+def test_stack_pad_split_roundtrip():
+    reqs = [_req("a", _frame(seed=i)) for i in range(3)]
+    batch, n = stack_frames(reqs, pad_to=4)     # pow2 padding bucket
+    assert n == 3 and batch["in"].shape == (4, 8, 6)
+    assert np.array_equal(batch["in"][3], batch["in"][2])  # repeat last
+    outs = split_frames(batch["in"], n)
+    assert len(outs) == 3
+    assert all(np.array_equal(o, r.inputs["in"])
+               for o, r in zip(outs, reqs))
+
+
+def test_stack_frames_rejects_mixed_signature():
+    with pytest.raises(AssertionError):
+        stack_frames([_req("a", _frame((8, 6))), _req("a", _frame((4, 4)))])
+
+
+# ---- sharding fallback + engine serving path ----
+
+def test_single_device_sharding_is_transparent():
+    import jax
+    assert frame_sharding([jax.devices()[0]]) is None
+    batch = {"in": np.arange(12, dtype=np.int64).reshape(3, 4),
+             "pair": (np.ones((3, 2), np.int64), np.zeros((3, 2), np.int64))}
+    dev, n = device_put_batch(batch, None)
+    assert n == 3
+    assert np.array_equal(np.asarray(dev["in"]), batch["in"])
+    assert str(dev["in"].dtype) == "int64"      # x64 transport preserved
+    padded, n2 = pad_frames(batch, 4)
+    assert n2 == 3 and padded["in"].shape[0] == 4
+    assert np.array_equal(padded["in"][3], batch["in"][2])
+
+
+def _check_run_batch_device(design, inputs_fn, donate):
+    batch = inputs_fn(np.random.RandomState(5), frames=3)
+    ref = design.run_batch(batch, backend="jax")
+    lp = design.lower("jax")
+    dev_batch, n = device_put_batch(batch, None)
+    out = lp.run_batch_device(dev_batch, donate=donate)
+    got = split_frames(out, n)
+    for i in range(n):
+        a = ref[i] if not isinstance(ref, tuple) else tuple(
+            e[i] for e in ref)
+        ga = got[i]
+        if isinstance(ga, tuple):
+            assert all(np.array_equal(np.asarray(x), np.asarray(y))
+                       for x, y in zip(ga, a))
+        else:
+            assert np.array_equal(np.asarray(ga), np.asarray(a))
+
+
+def test_run_batch_device_matches_run_batch(lowering_cases):
+    """The serving call path (device results, single-device fallback) is
+    bit-identical to run_batch for every app."""
+    for name, (design, inputs_fn) in lowering_cases.items():
+        _check_run_batch_device(design, inputs_fn, donate=False)
+
+
+def test_run_batch_device_donation_bit_exact(lowering_cases):
+    """Donating dead segment inputs cannot change results (donation is a
+    buffer-reuse hint; a no-op where unsupported).  One app suffices —
+    the donate key recompiles every program segment."""
+    design, inputs_fn = lowering_cases["flow"]
+    _check_run_batch_device(design, inputs_fn, donate=True)
+    lp = design.lower("jax")
+    assert any(t.dead_in for t in lp._plan)     # liveness pass found deads
+
+
+def test_engine_exposes_frame_signature(lowering_cases):
+    design, inputs_fn = lowering_cases["convolution"]
+    lp = design.lower("jax")
+    a = lp.frame_signature(inputs_fn(np.random.RandomState(0)))
+    b = lp.frame_signature(inputs_fn(np.random.RandomState(9)))
+    assert a == b                                # same shapes/dtypes
+    assert isinstance(hash(a), int)
+
+
+# ---- live server round trips ----
+
+def test_server_round_trip_bit_exact_two_apps(lowering_cases):
+    """Mixed-signature traffic (two apps, two sizes each per-frame RNG)
+    through one live server: every response bit-exact vs the numpy
+    executor; stats and report() surface the FIFO accounting."""
+    conv, conv_in = lowering_cases["convolution"]
+    stereo, stereo_in = lowering_cases["stereo"]
+    frames = []
+    for i in range(14):                          # not divisible by max_batch:
+        app = ("convolution", "stereo")[i % 2]   # exercises deadline flushes
+        fn = conv_in if app == "convolution" else stereo_in
+        frames.append((app, fn(np.random.RandomState(i))))
+    with FrameServer(max_batch=4, max_delay_ms=20.0) as srv:
+        srv.register(conv, name="convolution")
+        srv.register(stereo, name="stereo")
+        futs = [(app, inp, srv.submit(inp, app=app)) for app, inp in frames]
+        outs = [(app, inp, f.result(timeout=300)) for app, inp, f in futs]
+    for app, inp, out in outs:
+        d = conv if app == "convolution" else stereo
+        assert np.array_equal(np.asarray(out), evaluate(d.out_val, inp))
+    st = srv.stats
+    assert st.frames_in == st.frames_out == 14
+    assert st.batches >= 4 and st.inflight_hw >= 1
+    assert any("fifo occupancy" in ln for ln in st.report_lines())
+
+
+def test_design_serve_entrypoint_and_report(lowering_cases):
+    design, inputs_fn = lowering_cases["descriptor"]
+    frames = [inputs_fn(np.random.RandomState(i)) for i in range(5)]
+    with design.serve(max_batch=4, max_delay_ms=10.0) as srv:
+        outs = [f.result(timeout=300) for f in srv.submit_many(frames)]
+    for inp, out in zip(frames, outs):
+        ref = evaluate(design.out_val, inp)    # tuple-valued output app
+        assert isinstance(out, tuple) and len(out) == len(ref)
+        assert all(np.array_equal(np.asarray(a), np.asarray(b))
+                   for a, b in zip(out, ref))
+    assert " -- serve --" in design.report()
+    assert any("latency p50" in ln for ln in design.report().splitlines())
+
+
+def test_serve_config_validates():
+    for bad in (dict(depth=0), dict(max_batch=0), dict(max_queue=0),
+                dict(max_delay_ms=0)):
+        with pytest.raises(ValueError):
+            ServeConfig(**bad)
+
+
+def test_server_submit_unknown_app_raises(lowering_cases):
+    design, _ = lowering_cases["pyramid"]
+    with FrameServer(max_batch=2) as srv:
+        srv.register(design)
+        with pytest.raises(KeyError):
+            srv.submit({"x": np.zeros((2, 2))}, app="nope")
+    with pytest.raises(RuntimeError):
+        srv.submit({"x": np.zeros((2, 2))})      # closed
+
+
+def test_multi_device_sharded_serving_bit_exact():
+    """Frame-axis sharding across 8 (forced host) devices stays bit-exact;
+    runs in a subprocess so this process keeps its single-device view."""
+    import os
+    import subprocess
+    import sys
+    import textwrap
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = "src"
+    # don't contend with the parent process on the persistent XLA cache
+    # (conftest.py points both at .cache/jax, and the 8-device layout's
+    # entries are useless to the single-device parent anyway)
+    env["REPRO_NO_JAX_CACHE"] = "1"
+    for k in list(env):
+        if k.startswith("JAX_COMPILATION_CACHE") or \
+                k.startswith("JAX_PERSISTENT_CACHE"):
+            env.pop(k)
+    code = textwrap.dedent("""
+        import numpy as np, jax
+        assert len(jax.devices()) == 8
+        from repro.apps import BENCH_CASES
+        from repro.core import compile_pipeline
+        from repro.core.executor import evaluate
+        uf, inputs_fn = BENCH_CASES['flow']()
+        d = compile_pipeline(uf)
+        frames = [inputs_fn(np.random.RandomState(i)) for i in range(11)]
+        with d.serve(max_batch=8, max_delay_ms=20.0, donate=True) as srv:
+            outs = [f.result(timeout=300) for f in srv.submit_many(frames)]
+        for fr, o in zip(frames, outs):
+            ref = evaluate(d.out_val, fr)
+            if isinstance(ref, tuple):
+                assert all(np.array_equal(np.asarray(a), b)
+                           for a, b in zip(o, ref))
+            else:
+                assert np.array_equal(np.asarray(o), ref)
+        assert srv.stats.devices == 8
+        print('SHARDED_SERVE_OK')
+    """)
+    cwd = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    for attempt in (0, 1):        # one retry: 8 fake devices + full-suite
+        r = subprocess.run([sys.executable, "-c", code],  # load can OOM/stall
+                           capture_output=True, text=True, timeout=600,
+                           env=env, cwd=cwd)
+        if r.returncode == 0:
+            break
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "SHARDED_SERVE_OK" in r.stdout
+
+
+# ---- bench-regression gate logic ----
+
+def test_check_regression_logic():
+    from benchmarks.check_regression import find_regressions
+    base = {"apps": {"a": {"speedup_jax_vs_numpy": 4.0},
+                     "b": {"speedup_jax_vs_numpy": 2.0},
+                     "gone": {"speedup_jax_vs_numpy": 1.0}}}
+    fresh = {"apps": {"a": {"speedup_jax_vs_numpy": 3.2},   # -20%: ok
+                      "b": {"speedup_jax_vs_numpy": 1.4},   # -30%: regressed
+                      "new": {"speedup_jax_vs_numpy": 9.0}}}
+    rows, bad = find_regressions(base, fresh, threshold=0.25)
+    assert bad == ["b"]
+    assert any("REGRESSED" in r for r in rows)
+    assert sum("skipped" in r for r in rows) == 2   # gone + new never fail
