@@ -3,8 +3,13 @@
 Compares a fresh ``benchmarks/run.py --json`` result against the committed
 baseline (``git show HEAD:BENCH_kernels.json`` by default, so it works
 even after the fresh run has merge-updated the working-tree file) and
-fails when any app's warm ``speedup_jax_vs_numpy`` regressed by more than
-``--threshold`` (default 25%).
+fails when any app's gated metric regressed by more than ``--threshold``
+(default 25%). Two metrics are gated: the warm lowering speedup
+(``speedup_jax_vs_numpy``) and the serve throughput multiple
+(``serve.throughput_x_vs_run`` — dotted paths walk nested rows). An app
+with no committed baseline row for a metric is skipped cleanly: metrics
+absent from *both* sides produce no row at all, metrics present on only
+one side are reported but never fail the gate.
 
     PYTHONPATH=src python -m benchmarks.check_regression \
         --fresh BENCH_kernels.json [--baseline git|PATH] [--threshold 0.25]
@@ -18,9 +23,11 @@ import argparse
 import json
 import subprocess
 import sys
-from typing import Any, Dict, List, Tuple
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 METRIC = "speedup_jax_vs_numpy"
+SERVE_METRIC = "serve.throughput_x_vs_run"
+METRICS = (METRIC, SERVE_METRIC)
 
 
 def load_baseline(spec: str) -> Dict[str, Any]:
@@ -34,29 +41,47 @@ def load_baseline(spec: str) -> Dict[str, Any]:
         return json.load(f)
 
 
+def get_metric(row: Dict[str, Any], dotted: str) -> Optional[float]:
+    """Walk a dotted path through nested dicts; None on any missing hop or
+    a non-numeric leaf."""
+    cur: Any = row
+    for part in dotted.split("."):
+        if not isinstance(cur, dict) or part not in cur:
+            return None
+        cur = cur[part]
+    return cur if isinstance(cur, (int, float)) else None
+
+
 def find_regressions(base: Dict[str, Any], fresh: Dict[str, Any],
-                     threshold: float, metric: str = METRIC
+                     threshold: float,
+                     metrics: Sequence[str] = METRICS
                      ) -> Tuple[List[str], List[str]]:
-    """Returns (report_rows, regressed_app_names).  An app regresses when
-    its fresh metric drops below (1 - threshold) x baseline; apps missing
-    from either side are reported but never fail the gate (new apps land
-    without baselines)."""
+    """Returns (report_rows, regressed_names).  A metric regresses when its
+    fresh value drops below (1 - threshold) x baseline; metrics missing
+    from one side are reported but never fail the gate (new apps and new
+    metrics land without baselines), and metrics missing from both sides
+    are skipped silently."""
     rows, bad = [], []
     base_apps = base.get("apps", {})
     fresh_apps = fresh.get("apps", {})
     for app in sorted(set(base_apps) | set(fresh_apps)):
-        b = base_apps.get(app, {}).get(metric)
-        f = fresh_apps.get(app, {}).get(metric)
-        if b is None or f is None:
-            rows.append(f"{app:14s} {metric}: baseline={b} fresh={f} "
-                        "(skipped: missing side)")
-            continue
-        floor = b * (1.0 - threshold)
-        verdict = "OK" if f >= floor else "REGRESSED"
-        rows.append(f"{app:14s} {metric}: baseline={b:.3f} fresh={f:.3f} "
-                    f"floor={floor:.3f} {verdict}")
-        if f < floor:
-            bad.append(app)
+        for metric in metrics:
+            b = get_metric(base_apps.get(app, {}), metric)
+            f = get_metric(fresh_apps.get(app, {}), metric)
+            if b is None and f is None:
+                continue
+            if b is None or f is None:
+                reason = ("no committed baseline row" if b is None
+                          else "missing fresh row")
+                rows.append(f"{app:14s} {metric}: baseline={b} fresh={f} "
+                            f"(skipped: {reason})")
+                continue
+            floor = b * (1.0 - threshold)
+            verdict = "OK" if f >= floor else "REGRESSED"
+            rows.append(f"{app:14s} {metric}: baseline={b:.3f} "
+                        f"fresh={f:.3f} floor={floor:.3f} {verdict}")
+            if f < floor:
+                bad.append(f"{app}:{metric}")
     return rows, bad
 
 
@@ -68,12 +93,15 @@ def main() -> int:
                     help='"git" (HEAD-committed file) or a path')
     ap.add_argument("--threshold", type=float, default=0.25,
                     help="max allowed fractional drop (0.25 = 25%%)")
-    ap.add_argument("--metric", default=METRIC)
+    ap.add_argument("--metric", action="append", default=None,
+                    help="gate this dotted metric path (repeatable; "
+                         f"default: {', '.join(METRICS)})")
     args = ap.parse_args()
     base = load_baseline(args.baseline)
     with open(args.fresh) as f:
         fresh = json.load(f)
-    rows, bad = find_regressions(base, fresh, args.threshold, args.metric)
+    metrics = tuple(args.metric) if args.metric else METRICS
+    rows, bad = find_regressions(base, fresh, args.threshold, metrics)
     for v_name, doc in (("baseline", base), ("fresh", fresh)):
         vs = doc.get("versions")
         if vs:
@@ -81,7 +109,7 @@ def main() -> int:
                   " ".join(f"{k}={v}" for k, v in sorted(vs.items())))
     print("\n".join(rows))
     if bad:
-        print(f"FAIL: {len(bad)} app(s) regressed >"
+        print(f"FAIL: {len(bad)} metric(s) regressed >"
               f"{args.threshold:.0%}: {', '.join(bad)}")
         return 1
     print("bench-regression gate: OK")

@@ -17,13 +17,14 @@ def main() -> None:
                     help="merge-update BENCH_kernels.json (backend wall "
                          "times + serve metrics, version-stamped)")
     args = ap.parse_args()
-    from benchmarks import (bench_fifo, bench_hls_analog, bench_kernels,
-                            bench_lowering, bench_roofline, bench_serve,
-                            bench_schedule_range)
+    from benchmarks import (bench_fifo, bench_hls_analog, bench_hwsim,
+                            bench_kernels, bench_lowering, bench_roofline,
+                            bench_serve, bench_schedule_range)
     rows = []
     benches = [
         ("schedule_range (paper fig 9/10)", bench_schedule_range.run),
         ("fifo auto-vs-manual (paper fig 11)", bench_fifo.run),
+        ("hwsim simulated allocation (paper §7.3)", bench_hwsim.run),
         ("hls analog (paper §7.4)", bench_hls_analog.run),
         ("kernels", bench_kernels.run),
         ("lowering backends", bench_lowering.run),
@@ -39,7 +40,8 @@ def main() -> None:
     json_failed = False
     if args.json:
         print("# writing BENCH_kernels.json", file=sys.stderr, flush=True)
-        for writer in (bench_lowering.write_json, bench_serve.write_json):
+        for writer in (bench_lowering.write_json, bench_serve.write_json,
+                       bench_hwsim.write_json):
             try:
                 writer("BENCH_kernels.json")
             except Exception as e:  # don't lose the CSV over a write failure

@@ -27,3 +27,14 @@ BENCH_CASES = {
     "descriptor": _desc.bench_case,
     "pyramid": _pyr.bench_case,
 }
+
+# uniform (UserFunction, target T, hand FIFO annotations) small cases for
+# the cycle simulator + FIFO allocator (repro/hwsim); the first four are
+# the paper's evaluation apps (§7)
+SIM_CASES = {
+    "convolution": _conv.sim_case,
+    "stereo": _stereo.sim_case,
+    "flow": _flow.sim_case,
+    "descriptor": _desc.sim_case,
+    "pyramid": _pyr.sim_case,
+}

@@ -67,6 +67,19 @@ def bench_case(w: int = 96, h: int = 40):
     return uf, inputs
 
 
+# paper §7.2: the hand annotation zeroes the burst slack of the DMA-backed
+# border modules (the AXI memory system absorbs their bursts)
+HAND_FIFO = {"pad": 0, "crop": 0}
+
+
+def sim_case(w: int = 96, h: int = 40):
+    """Small instance + target throughput + hand FIFO annotations: the
+    uniform surface for the cycle simulator (benchmarks/bench_hwsim.py,
+    tests/test_hwsim.py)."""
+    from fractions import Fraction
+    return Convolution(w=w, h=h), Fraction(1), HAND_FIFO
+
+
 def golden_convolution(img: np.ndarray, kernel: np.ndarray = None
                        ) -> np.ndarray:
     """Independent numpy reference (sliding windows, not the executor)."""

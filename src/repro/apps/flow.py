@@ -68,6 +68,18 @@ def bench_case(w: int = 48, h: int = 24):
     return uf, inputs
 
 
+# FLOW's modules are all smooth-rate (stencils + float maps): nothing for
+# the hand annotation to zero — the solver's slack is the whole story
+HAND_FIFO = {}
+
+
+def sim_case(w: int = 48, h: int = 24):
+    """Small instance + target throughput + hand FIFO annotations for the
+    cycle simulator (see convolution.sim_case)."""
+    from fractions import Fraction
+    return Flow(w=w, h=h), Fraction(1), HAND_FIFO
+
+
 def golden_flow(i1: np.ndarray, i2: np.ndarray):
     h, w = i1.shape
     f32 = np.float32

@@ -41,6 +41,18 @@ def bench_case(w: int = 96, h: int = 64, levels: int = 2):
     return uf, inputs
 
 
+# the hand annotation zeroes the DMA-absorbed Downsample bursts (the same
+# reasoning as convolution's pad/crop)
+HAND_FIFO = {"downsample": 0}
+
+
+def sim_case(w: int = 64, h: int = 32, levels: int = 2):
+    """Small instance + target throughput + hand FIFO annotations for the
+    cycle simulator (see convolution.sim_case)."""
+    from fractions import Fraction
+    return Pyramid(w=w, h=h, levels=levels), Fraction(1), HAND_FIFO
+
+
 def golden_pyramid(img: np.ndarray, levels: int = 2) -> np.ndarray:
     s = 2 ** levels
     coarse = img[::s, ::s]

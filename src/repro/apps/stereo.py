@@ -46,6 +46,18 @@ def bench_case(w: int = 64, h: int = 24, nd: int = 8):
     return uf, inputs
 
 
+# STEREO has no bursty border/sparse modules: the hand-tuned allocation
+# annotates nothing, so auto-vs-hand differs only by what the solver adds
+HAND_FIFO = {}
+
+
+def sim_case(w: int = 64, h: int = 24, nd: int = 8):
+    """Small instance + target throughput + hand FIFO annotations for the
+    cycle simulator (see convolution.sim_case)."""
+    from fractions import Fraction
+    return Stereo(w=w, h=h, nd=nd), Fraction(1, 2), HAND_FIFO
+
+
 def golden_stereo(left: np.ndarray, right: np.ndarray, nd: int = ND
                   ) -> np.ndarray:
     h, w = left.shape

@@ -44,6 +44,7 @@ class HWDesign:
     backend: str = "numpy"            # default run() backend
     _lowered: Dict[str, Any] = field(default_factory=dict, repr=False)
     _serve_stats: List[Any] = field(default_factory=list, repr=False)
+    _hwsim: List[Any] = field(default_factory=list, repr=False)
 
     # ---- reports ----
     @property
@@ -98,6 +99,32 @@ class HWDesign:
             if np.any(cons_px[:cap_px] > prod_px[:cap_px] + vp):
                 ok = False
         return ok
+
+    def simulate(self, fifo_depths: Optional[Dict[Tuple[int, int], int]] = None,
+                 unbounded: bool = False, max_cycles: Optional[int] = None,
+                 sample_every: int = 0):
+        """Cycle-level dataflow simulation of the mapped module graph
+        (repro/hwsim): valid/ready token handshakes over the solved FIFO
+        depths (or ``fifo_depths`` overrides; ``unbounded=True`` removes
+        all capacity limits). Returns a SimResult with the frame's cycle
+        count, sink throughput, per-FIFO high-water marks and a deadlock
+        diagnosis. The latest result feeds ``report()``."""
+        from ..hwsim import simulate as _simulate  # lazy, like serve/lower
+        res = _simulate(self, fifo_depths=fifo_depths, unbounded=unbounded,
+                        max_cycles=max_cycles, sample_every=sample_every)
+        self._hwsim[:] = [res]
+        return res
+
+    def optimize_fifos(self, guard: int = 0,
+                       max_cycles: Optional[int] = None):
+        """Simulation-guided FIFO allocation (repro/hwsim.allocate): shrink
+        every FIFO from its analytic depth to the simulated high-water mark
+        (+``guard``), re-simulate to prove the frame time is unchanged, and
+        return the AllocationResult. The result feeds ``report()``."""
+        from ..hwsim import allocate_fifos
+        alloc = allocate_fifos(self, guard=guard, max_cycles=max_cycles)
+        self._hwsim[:] = [alloc]
+        return alloc
 
     def lower(self, backend: Optional[str] = None, debug: bool = False):
         """The lowering-compiler executable for this design (cached per
@@ -204,6 +231,9 @@ class HWDesign:
         for st in self._serve_stats:
             lines.append(" -- serve --")
             lines.extend(f"  {ln}" for ln in st.report_lines())
+        for hs in self._hwsim:
+            lines.append(" -- hwsim --")
+            lines.extend(f"  {ln}" for ln in hs.report_lines())
         return "\n".join(lines)
 
 

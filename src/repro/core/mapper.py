@@ -305,9 +305,14 @@ def _map_border(v: Val, site: Site, tracefn) -> RModule:
                          ScheduleType(scalar_of(in_ty), w, h, 1,
                                       max(1, math.ceil(site.in_px_rate))))
     res = Resources(luts=48 + iface_out.sched.token_bits // 4, regs=48)
+    # the cycle simulator (repro/hwsim) rebuilds this module's exact
+    # consumption->production profile from the border geometry
+    geom = {"in_w": w, "in_h": h}
+    geom.update({k: p[k] for k in ("l", "r", "b", "t", "sx", "sy")
+                 if k in p})
     return RModule(v.op.lower(), v.op, iface_in, iface_out,
                    _rate_of(site, iface_out.sched.v, 1), max(1, L), burst=B,
-                   resources=res, src_uid=v.uid)
+                   resources=res, src_uid=v.uid, info={"geom": geom})
 
 
 def map_pad(v: Val, site: Site) -> RModule:

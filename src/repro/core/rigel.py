@@ -158,11 +158,28 @@ def optimize_lanes(px_scalars: int, w: int, h: int,
                    required_scalars_per_cycle: Fraction) -> Tuple[int, Fraction]:
     """``type:optimize`` (paper fig. 7): the legal vector width with the
     lowest cost that meets-or-exceeds the required throughput — i.e. the
-    smallest legal V with rate = required/V <= 1 (fig. 6's red point)."""
+    smallest legal V with rate = required/V <= 1 (fig. 6's red point).
+
+    Whole-pixel lane counts that do *not* divide the (possibly padded) row
+    width are legal too: the frame's final partial transaction is padded
+    (``ScheduleType.tokens_per_frame`` rounds up), so the cheapest V at
+    sub-row parallelism is the next whole-pixel multiple of the
+    requirement, not the next row divisor. Earlier versions silently
+    skipped these and over-provisioned lanes (e.g. V=8 instead of V=5 on
+    a 1936-wide padded row)."""
+    req = Fraction(required_scalars_per_cycle)
     cands = valid_lane_counts(px_scalars, w, h)
+    best = None
     for v in cands:
-        if Fraction(v) >= required_scalars_per_cycle:
-            return v, Fraction(required_scalars_per_cycle, v)
+        if Fraction(v) >= req:
+            best = v
+            break
+    if px_scalars < req <= px_scalars * w:
+        v_pad = px_scalars * math.ceil(req / px_scalars)
+        if best is None or v_pad < best:
+            best = v_pad
+    if best is not None:
+        return best, Fraction(req, best)
     # requirement exceeds the largest single instance: replicate instances
     vmax = cands[-1]
     return vmax, Fraction(1)  # caller replicates ceil(required/vmax) instances

@@ -66,7 +66,31 @@ def fit_LB(actual: np.ndarray, R: Fraction) -> Tuple[int, int]:
 
 
 # --------------------------------------------------------------------------
-# analytic burst traces for the bursty built-ins (used by the mapper)
+# analytic burst traces for the bursty built-ins (used by the mapper and by
+# the cycle simulator's consumption->production profiles, repro/hwsim)
+
+
+def invert_trace(cum: np.ndarray) -> np.ndarray:
+    """Invert a cumulative production trace: ``need[j-1]`` is the smallest
+    input count i (1-based) with ``cum[i-1] >= j``, for j = 1..cum[-1] —
+    i.e. how many input tokens must have arrived before output j can exist.
+    The hwsim simulator uses this to drive Crop/Downsample consumption."""
+    total = int(cum[-1])
+    return (np.searchsorted(cum, np.arange(1, total + 1, dtype=np.int64),
+                            side="left") + 1).astype(np.int64)
+
+
+def pad_need_trace(w: int, h: int, l: int, r: int, b: int, t: int
+                   ) -> np.ndarray:
+    """Input pixels required (cumulative, inclusive) before each padded
+    output pixel can be emitted, row-major over the padded image. Border
+    pixels are generated inline (need only what is already consumed);
+    interior pixel j needs its own input token. Matches the executor's
+    orientation: the image lands at rows t..t+h, cols l..l+w."""
+    pw, ph = w + l + r, h + b + t
+    y, x = np.mgrid[0:ph, 0:pw]
+    interior = (y >= t) & (y < t + h) & (x >= l) & (x < l + w)
+    return np.cumsum(interior.ravel()).astype(np.int64)
 
 
 def pad_trace(w: int, h: int, l: int, r: int, b: int, t: int) -> np.ndarray:

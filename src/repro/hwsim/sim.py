@@ -1,0 +1,370 @@
+"""Cycle-level streaming-dataflow simulator over the mapped RModule graph.
+
+The value domain (executor.py / core/lowering) computes WHAT the pipeline
+produces; this module computes WHEN: per-cycle valid/ready token handshakes
+across the module netlist with finite FIFOs. It is the dynamic mirror of the
+static solve in core/buffers.py — same rates R, latencies L and FIFO depths,
+but tokens actually move, stall, and back-propagate pressure, so the
+per-FIFO high-water marks it records *measure* the buffering the analytic
+model only *bounds* (paper §4.2-4.3, §7.3).
+
+Model, per cycle:
+  - a module launches output token k only once every in-edge e has delivered
+    ``need_e(k)`` tokens (at most one token per edge moves per cycle);
+  - launches of rate-R modules are throttled by a depth-one token bucket
+    (no catch-up bursts after stalls — the model trace's slope is R);
+  - the bursty border ops (Pad / Crop / Downsample) are *not* throttled:
+    their irregular production is driven by exact consumption->production
+    profiles reconstructed from their schedule traces, so the simulation
+    exercises the very bursts the analytic model pads FIFOs for;
+  - a launched token matures L cycles later and is then pushed downstream,
+    blocking on FIFO space (broadcast modules need space on every out-edge).
+
+Token payloads are not modeled — only counts move, which is all FIFO sizing
+needs. Deadlock/starvation is detected as a sustained absence of token
+movement and reported with a per-module blocked/starved diagnosis.
+"""
+from __future__ import annotations
+
+import math
+from collections import deque
+from dataclasses import dataclass
+from fractions import Fraction
+from typing import Callable, Dict, List, Mapping, Optional, Sequence, Tuple
+
+from ..core import schedule as sched
+from ..core.buffers import Edge
+from ..core.rigel import RModule
+from .occupancy import EdgeOccupancy, OccupancyTrace
+
+EdgeKey = Tuple[int, int]
+
+# module kinds whose production timing comes from an exact per-pixel profile
+# rather than the smooth rate-R model (their burstiness is the point)
+PROFILED = ("Pad", "Crop", "Downsample")
+
+# module kinds whose burstiness is data-dependent and therefore NOT exercised
+# by this deterministic simulation; the allocator keeps their annotated burst
+# slots (paper §4.3 — e.g. the user-supplied Filter bound, External IP)
+UNEXERCISED_BURSTY = ("Filter", "SparseTake", "External")
+
+
+class _SimEdge:
+    __slots__ = ("idx", "key", "cap", "occ", "hwm", "hwm_cycle",
+                 "pushed", "popped", "token_bits")
+
+    def __init__(self, idx: int, key: EdgeKey, cap: Optional[int],
+                 token_bits: int):
+        self.idx = idx
+        self.key = key
+        self.cap = cap          # None = unbounded
+        self.occ = 0
+        self.hwm = 0
+        self.hwm_cycle = 0
+        self.pushed = 0
+        self.popped = 0
+        self.token_bits = token_bits
+
+
+class _SimMod:
+    __slots__ = ("idx", "name", "kind", "rnum", "rden", "latency",
+                 "out_total", "throttled", "in_edges", "out_edges",
+                 "consumed", "launched", "pushed", "inflight", "credit",
+                 "_need_k", "_need_v")
+
+    def __init__(self, idx: int, name: str, kind: str, rate: Fraction,
+                 latency: int, out_total: int, throttled: bool):
+        self.idx = idx
+        self.name = name
+        self.kind = kind
+        self.rnum, self.rden = rate.numerator, rate.denominator
+        self.latency = latency
+        self.out_total = out_total
+        self.throttled = throttled
+        self.in_edges: List[Tuple[_SimEdge, Callable[[int], int]]] = []
+        self.out_edges: List[_SimEdge] = []
+        self.consumed: List[int] = []
+        self.launched = 0
+        self.pushed = 0
+        self.inflight: deque = deque()
+        self.credit = 0
+        self._need_k = 0
+        self._need_v: List[int] = []
+
+    def needs(self, k: int) -> List[int]:
+        if self._need_k != k:
+            self._need_k = k
+            self._need_v = [need(k) for _, need in self.in_edges]
+        return self._need_v
+
+
+@dataclass
+class SimResult:
+    """One simulated frame: cycle count, sink throughput, per-FIFO occupancy
+    high-water marks, and a deadlock diagnosis (None = completed)."""
+
+    cycles: int
+    sink_tokens: int
+    deadlock: Optional[str]
+    occupancy: OccupancyTrace
+
+    @property
+    def completed(self) -> bool:
+        return self.deadlock is None
+
+    @property
+    def throughput(self) -> Fraction:
+        """Sink tokens per cycle over the simulated frame."""
+        if self.cycles <= 0:
+            return Fraction(0)
+        return Fraction(self.sink_tokens, self.cycles)
+
+    def hwm_by_key(self) -> Dict[EdgeKey, int]:
+        return self.occupancy.hwm_by_key()
+
+    def report_lines(self) -> List[str]:
+        status = "ok" if self.completed else f"DEADLOCK: {self.deadlock}"
+        lines = [f"cycles={self.cycles} sink_tokens={self.sink_tokens} "
+                 f"throughput={float(self.throughput):.4g} tok/cyc  {status}"]
+        lines.extend(self.occupancy.report_lines())
+        return lines
+
+
+# --------------------------------------------------------------------------
+# consumption profiles
+
+
+def _ceil_div(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def _need_profile(cons: RModule, prod: RModule, tpf_e: int) -> Optional[
+        Callable[[int], int]]:
+    """Exact token-level need function for the profiled border ops, from
+    their pixel-level schedule traces (core/schedule.py)."""
+    geom = cons.info.get("geom")
+    if cons.kind not in PROFILED or not geom:
+        return None
+    w, h = geom["in_w"], geom["in_h"]
+    if cons.kind == "Pad":
+        need_px = sched.pad_need_trace(w, h, geom["l"], geom["r"],
+                                       geom["b"], geom["t"])
+    elif cons.kind == "Crop":
+        need_px = sched.invert_trace(
+            sched.crop_trace(w, h, geom["l"], geom["r"],
+                             geom["b"], geom["t"]))
+    else:  # Downsample
+        need_px = sched.invert_trace(
+            sched.downsample_trace(w, h, geom["sx"], geom["sy"]))
+    total_out_px = len(need_px)
+    v_out = cons.iface_out.sched.v
+    pxs_out = cons.iface_out.sched.px_scalars
+    v_in = prod.iface_out.sched.v
+    pxs_in = prod.iface_out.sched.px_scalars
+
+    def need(k: int) -> int:
+        p = min(total_out_px, _ceil_div(k * v_out, pxs_out))
+        if p <= 0:
+            return 0
+        npx = int(need_px[p - 1])
+        return min(tpf_e, _ceil_div(npx * pxs_in, v_in))
+
+    return need
+
+
+def _need_proportional(tpf_e: int, out_total: int) -> Callable[[int], int]:
+    def need(k: int) -> int:
+        return min(tpf_e, _ceil_div(k * tpf_e, out_total))
+
+    return need
+
+
+# --------------------------------------------------------------------------
+# graph construction
+
+
+def build_sim(modules: Sequence[RModule], edges: Sequence[Edge],
+              depths: Mapping[EdgeKey, int],
+              unbounded: bool = False) -> "CycleSim":
+    """Build a CycleSim over a mapped module netlist. ``depths`` maps
+    (src, dst) module indices to FIFO depths; simulated capacity is
+    depth + 1 (the producer's output register counts as one slot)."""
+    mods: List[_SimMod] = []
+    for i, m in enumerate(modules):
+        out_total = m.iface_out.sched.tokens_per_frame
+        throttled = (m.kind not in PROFILED
+                     and 0 < Fraction(m.rate) < 1)
+        rate = Fraction(m.rate) if m.rate > 0 else Fraction(1)
+        mods.append(_SimMod(i, m.name, m.kind, rate, m.latency,
+                            out_total, throttled))
+    sim_edges: List[_SimEdge] = []
+    for ei, e in enumerate(edges):
+        key = (e.src, e.dst)
+        cap = None if unbounded else int(depths.get(key, 0)) + 1
+        se = _SimEdge(ei, key, cap, e.token_bits)
+        sim_edges.append(se)
+        prod, cons = modules[e.src], modules[e.dst]
+        tpf_e = prod.iface_out.sched.tokens_per_frame
+        need = (_need_profile(cons, prod, tpf_e)
+                or _need_proportional(tpf_e, mods[e.dst].out_total))
+        mods[e.dst].in_edges.append((se, need))
+        mods[e.dst].consumed.append(0)
+        mods[e.src].out_edges.append(se)
+    return CycleSim(mods, sim_edges)
+
+
+# --------------------------------------------------------------------------
+# the cycle engine
+
+
+class CycleSim:
+    """Discrete time-step engine. Two phases per cycle: (A) matured tokens
+    push into downstream FIFOs (broadcast blocks on any full out-edge);
+    (B) modules consume from in-edges toward their next output's needs and
+    launch it when needs + rate credit allow."""
+
+    def __init__(self, mods: List[_SimMod], edges: List[_SimEdge]):
+        self.mods = mods
+        self.edges = edges
+        # only modules that participate in the dataflow are stepped: Const
+        # register banks (no edges at all) are always-valid and never move
+        self.active = [m for m in mods if m.in_edges or m.out_edges]
+        self.sinks = [m for m in self.active
+                      if m.in_edges and not m.out_edges]
+
+    def _stall_limit(self) -> int:
+        max_l = max((m.latency for m in self.active), default=0)
+        max_gap = max((_ceil_div(m.rden, max(1, m.rnum))
+                       for m in self.active), default=1)
+        return max_l + max_gap + 64
+
+    def _default_horizon(self) -> int:
+        est = 0
+        for m in self.active:
+            rate = Fraction(m.rnum, m.rden)
+            est = max(est, m.latency + math.ceil(m.out_total / rate))
+        return 8 * est + 16 * self._stall_limit()
+
+    def run(self, max_cycles: Optional[int] = None,
+            sample_every: int = 0) -> SimResult:
+        horizon = max_cycles or self._default_horizon()
+        stall_limit = self._stall_limit()
+        t = 0
+        last_progress = 0
+        samples: List[Tuple[int, List[int]]] = []
+        while not all(s.launched >= s.out_total for s in self.sinks):
+            if t >= horizon:
+                return self._result(t, f"horizon exceeded ({horizon} cycles)",
+                                    samples)
+            if t - last_progress > stall_limit:
+                return self._result(t, self._diagnose(), samples)
+            progress = False
+            # --- phase A: matured tokens push downstream ---
+            for m in self.active:
+                fl = m.inflight
+                if fl and fl[0] <= t:
+                    blocked = False
+                    for e in m.out_edges:
+                        if e.cap is not None and e.occ >= e.cap:
+                            blocked = True
+                            break
+                    if not blocked:
+                        fl.popleft()
+                        m.pushed += 1
+                        for e in m.out_edges:
+                            e.occ += 1
+                            e.pushed += 1
+                            if e.occ > e.hwm:
+                                e.hwm = e.occ
+                                e.hwm_cycle = t
+                        progress = True
+            if sample_every and t % sample_every == 0:
+                samples.append((t, [e.occ for e in self.edges]))
+            # --- phase B: consume toward the next output, then launch ---
+            for m in self.active:
+                if m.launched >= m.out_total:
+                    continue
+                k = m.launched + 1
+                needs = m.needs(k)
+                ready = True
+                for j, (e, _) in enumerate(m.in_edges):
+                    if m.consumed[j] < needs[j] and e.occ > 0:
+                        e.occ -= 1
+                        e.popped += 1
+                        m.consumed[j] += 1
+                        progress = True
+                    if m.consumed[j] < needs[j]:
+                        ready = False
+                if m.throttled:
+                    c = m.credit + m.rnum
+                    if ready and c >= m.rden:
+                        self._launch(m, t)
+                        m.credit = c - m.rden
+                        progress = True
+                    else:
+                        # depth-one bucket: no catch-up burst after a stall
+                        m.credit = min(c, m.rden)
+                elif ready:
+                    self._launch(m, t)
+                    progress = True
+            if progress:
+                last_progress = t
+            t += 1
+        return self._result(t, None, samples)
+
+    @staticmethod
+    def _launch(m: _SimMod, t: int) -> None:
+        m.launched += 1
+        m.inflight.append(t + m.latency)
+        if not m.out_edges:          # sink: absorb, nothing matures
+            m.inflight.pop()
+            m.pushed += 1
+
+    def _diagnose(self) -> str:
+        why = []
+        for m in self.active:
+            if m.launched >= m.out_total and not m.inflight:
+                continue
+            k = m.launched + 1
+            starved = [e.key for j, (e, _) in enumerate(m.in_edges)
+                       if k <= m.out_total
+                       and m.consumed[j] < m.needs(k)[j] and e.occ == 0]
+            full = [e.key for e in m.out_edges
+                    if m.inflight and e.cap is not None and e.occ >= e.cap]
+            if starved or full:
+                why.append(f"{m.name}[{m.idx}]"
+                           + (f" starved on {starved}" if starved else "")
+                           + (f" blocked on full {full}" if full else ""))
+        return "; ".join(why) or "no token movement"
+
+    def _result(self, t: int, deadlock: Optional[str],
+                samples: List[Tuple[int, List[int]]]) -> SimResult:
+        per_edge = [EdgeOccupancy(e.key, None if e.cap is None else e.cap - 1,
+                                  e.hwm, e.hwm_cycle, e.pushed, e.popped,
+                                  e.token_bits)
+                    for e in self.edges]
+        occ = OccupancyTrace(per_edge, t,
+                             sample_cycles=[s[0] for s in samples],
+                             samples=[s[1] for s in samples] or None)
+        sink_tokens = sum(s.launched for s in self.sinks)
+        return SimResult(t, sink_tokens, deadlock, occ)
+
+
+# --------------------------------------------------------------------------
+# public entry point
+
+
+def simulate(design, fifo_depths: Optional[Mapping[EdgeKey, int]] = None,
+             unbounded: bool = False, max_cycles: Optional[int] = None,
+             sample_every: int = 0) -> SimResult:
+    """Simulate one frame through ``design`` (an HWDesign).
+
+    ``fifo_depths`` overrides the design's solved per-edge depths (missing
+    keys fall back to the analytic solution); ``unbounded=True`` removes all
+    capacity limits, so the recorded high-water marks are the pipeline's
+    true dynamic buffering requirement."""
+    depths: Dict[EdgeKey, int] = dict(design.fifo.depth) if design.fifo else {}
+    if fifo_depths:
+        depths.update(fifo_depths)
+    sim = build_sim(design.modules, design.edges, depths, unbounded=unbounded)
+    return sim.run(max_cycles=max_cycles, sample_every=sample_every)

@@ -1,0 +1,68 @@
+"""Vector-width legality + type:optimize lane selection (core/rigel.py)."""
+from fractions import Fraction
+
+from repro.core.rigel import (ScheduleType, fifo_resources, optimize_lanes,
+                              valid_lane_counts)
+from repro.core.dtypes import UInt
+
+
+def test_valid_lane_counts_structure():
+    # payload divisors, then whole-pixel row divisors, then whole rows
+    cands = valid_lane_counts(4, 6, 2)
+    assert {1, 2, 4} <= set(cands)                   # payload divisors
+    assert {4 * d for d in (1, 2, 3, 6)} <= set(cands)   # row divisors
+    assert 4 * 6 * 2 in cands                        # whole frame
+
+
+def test_optimize_lanes_prefers_exact_divisor():
+    v, rate = optimize_lanes(1, 1920, 1080, Fraction(3))
+    assert v == 3 and rate == 1                      # 3 | 1920
+
+
+def test_optimize_lanes_nondivisor_row_width_regression():
+    """Regression: a padded row width of 1936 = 2^4 * 11^2 has no divisor
+    5; the seed silently skipped V=5 and over-provisioned V=8. A whole-
+    pixel lane count that does not divide the row is legal (the final
+    partial transaction pads), so the optimizer must pick it."""
+    v, rate = optimize_lanes(1, 1936, 8, Fraction(5))
+    assert v == 5 and rate == 1
+    # and the non-divisor token count still covers the frame exactly
+    st = ScheduleType(UInt(8), 1936, 8, 1, v)
+    assert st.tokens_per_frame * v >= 1936 * 8
+
+
+def test_optimize_lanes_nondivisor_fractional_requirement():
+    # requirement 4.5 scalars/cycle on a 1936-wide row: next whole pixel
+    # count is 5, not the next divisor 8
+    v, rate = optimize_lanes(1, 1936, 8, Fraction(9, 2))
+    assert v == 5
+    assert rate == Fraction(9, 10) <= 1
+
+
+def test_optimize_lanes_subpixel_unchanged():
+    # below one pixel the payload must still divide evenly (no padding
+    # inside a pixel's scalars): 64-scalar patches at 3 scalars/cycle
+    # round up to the divisor 4
+    v, rate = optimize_lanes(64, 10, 10, Fraction(3))
+    assert v == 4 and rate == Fraction(3, 4)
+
+
+def test_optimize_lanes_replication_fallthrough():
+    # requirement beyond the whole frame: max lanes, rate 1, caller
+    # replicates instances
+    v, rate = optimize_lanes(1, 4, 2, Fraction(100))
+    assert v == 8 and rate == 1
+
+
+def test_optimize_lanes_rate_never_exceeds_one():
+    for req in (Fraction(1, 7), Fraction(2), Fraction(11, 3), Fraction(13)):
+        v, rate = optimize_lanes(1, 14, 3, req)
+        assert rate <= 1
+
+
+def test_fifo_resources_srl_vs_bram_boundary():
+    srl = fifo_resources(32, 16)
+    bram = fifo_resources(33, 16)
+    assert srl.bram_bits == 0 and srl.luts == 16
+    assert bram.bram_bits == 64 * 16        # next pow2 ram depth
+    assert fifo_resources(0, 16).luts == 0

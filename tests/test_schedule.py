@@ -1,0 +1,179 @@
+"""core/schedule.py's analytic FIFO bound, cross-checked against the cycle
+simulator: zero-latency chains, multi-consumer fan-out, and agreement with
+simulated high-water marks on the four paper apps (deterministic — no
+hypothesis dependency, unlike test_solvers.py)."""
+from fractions import Fraction
+
+import numpy as np
+import pytest
+
+from repro.core import buffers as buf
+from repro.core import compile_pipeline
+from repro.core import schedule as sched
+from repro.apps import SIM_CASES
+from repro.hwsim.sim import (CycleSim, _need_proportional, _SimEdge,
+                             _SimMod, simulate)
+
+SIZES = {
+    "convolution": dict(w=48, h=20),
+    "stereo": dict(w=32, h=12, nd=8),
+    "flow": dict(w=24, h=12),
+    "descriptor": dict(w=32, h=24, n_features=16, filter_burst=64),
+}
+
+
+# ---- analytic bound: zero-latency chains ----
+
+
+def test_zero_latency_chain_needs_no_buffering():
+    """A chain of zero-latency modules has zero slack everywhere: the
+    consumer can start the same cycle as the producer (§4.2)."""
+    n = 6
+    edges = [buf.Edge(i, i + 1, token_bits=8, src_latency=0, src_burst=0)
+             for i in range(n - 1)]
+    sol = buf.solve_buffers(n, edges, solver="lp")
+    assert sol.total_bits == 0
+    assert all(d == 0 for d in sol.depth.values())
+    assert sol.start == [0] * n
+
+
+def test_zero_latency_chain_simulates_at_full_rate():
+    """The same chain in the cycle domain: depth-0 FIFOs (capacity = the
+    producer's output register) sustain rate 1 — n tokens in ~n cycles."""
+    n_mods, n_tok = 5, 40
+    mods = [_SimMod(i, f"m{i}", "Map", Fraction(1), 0, n_tok, False)
+            for i in range(n_mods)]
+    edges = []
+    for i in range(n_mods - 1):
+        e = _SimEdge(i, (i, i + 1), cap=1, token_bits=8)   # depth 0
+        edges.append(e)
+        mods[i].out_edges.append(e)
+        mods[i + 1].in_edges.append((e, _need_proportional(n_tok, n_tok)))
+        mods[i + 1].consumed.append(0)
+    res = CycleSim(mods, edges).run()
+    assert res.deadlock is None
+    assert res.cycles <= n_tok + n_mods
+    for e in res.occupancy.per_edge:
+        assert e.needed_depth == 0
+
+
+# ---- analytic bound: multi-consumer fan-out ----
+
+
+def _diamond(depth_fast):
+    """fanout -> {direct edge, latency-10 path} -> join: the classic
+    reconvergence that forces slack onto the fast edge."""
+    lat = 10
+    n_tok = 60
+    f = _SimMod(0, "fanout", "FanOut", Fraction(1), 0, n_tok, False)
+    m = _SimMod(1, "slow", "Map", Fraction(1), lat, n_tok, False)
+    j = _SimMod(2, "join", "Map", Fraction(1), 0, n_tok, False)
+    e_fast = _SimEdge(0, (0, 2), cap=depth_fast + 1 if depth_fast is not None
+                      else None, token_bits=8)
+    e_in = _SimEdge(1, (0, 1), cap=2, token_bits=8)
+    e_slow = _SimEdge(2, (1, 2), cap=2, token_bits=8)
+    f.out_edges.extend([e_fast, e_in])
+    m.in_edges.append((e_in, _need_proportional(n_tok, n_tok)))
+    m.consumed.append(0)
+    m.out_edges.append(e_slow)
+    j.in_edges.append((e_fast, _need_proportional(n_tok, n_tok)))
+    j.consumed.append(0)
+    j.in_edges.append((e_slow, _need_proportional(n_tok, n_tok)))
+    j.consumed.append(0)
+    return CycleSim([f, m, j], [e_fast, e_in, e_slow]), lat, n_tok
+
+
+def test_fanout_reconvergence_analytic_slack():
+    """The solver puts latency-difference slack on the fast edge of a
+    reconvergent fan-out."""
+    lat = 10
+    edges = [buf.Edge(0, 2, 8, 0, 0),          # fast: fanout -> join
+             buf.Edge(0, 1, 8, 0, 0),          # fanout -> slow
+             buf.Edge(1, 2, 8, lat, 0)]        # slow -> join
+    sol = buf.solve_buffers(3, edges, solver="lp")
+    assert sol.depth[(0, 2)] == lat
+    assert sol.depth[(1, 2)] == 0
+
+
+def test_fanout_reconvergence_simulated_hwm_matches_slack():
+    """Simulated: with the analytic slack the diamond runs at full rate and
+    the fast edge's high-water mark IS the analytic bound; any less depth
+    loses throughput (tokens pile up exactly where the solver said)."""
+    lat = 10
+    sim, _, n_tok = _diamond(depth_fast=None)          # unbounded
+    free = sim.run()
+    assert free.deadlock is None
+    fast = [e for e in free.occupancy.per_edge if e.key == (0, 2)][0]
+    assert fast.needed_depth == lat                    # == analytic slack
+    sim2, _, _ = _diamond(depth_fast=lat)
+    exact = sim2.run()
+    assert exact.deadlock is None and exact.cycles == free.cycles
+    sim3, _, _ = _diamond(depth_fast=max(0, lat // 2))
+    starved = sim3.run()
+    assert starved.deadlock is None
+    assert starved.cycles > exact.cycles               # throughput lost
+
+
+# ---- agreement on the paper's four apps ----
+
+
+@pytest.mark.parametrize("name", sorted(SIZES))
+def test_apps_analytic_bound_is_dynamically_sufficient(name):
+    """The solver's depths impose no slowdown: a frame takes exactly as
+    long under the analytic allocation as with unbounded FIFOs, and no
+    FIFO's simulated high-water mark exceeds its analytic capacity."""
+    uf, T, _ = SIM_CASES[name](**SIZES[name])
+    design = compile_pipeline(uf, T=T)
+    bounded = simulate(design)
+    free = simulate(design, unbounded=True)
+    assert bounded.deadlock is None
+    assert bounded.cycles == free.cycles
+    ana = design.fifo.depth
+    for key, need in bounded.occupancy.needed_depth_by_key().items():
+        assert need <= ana[key]
+
+
+# ---- the (L, B) trace model on the built-in burst traces ----
+
+
+def test_crop_trace_fit_bounds_the_burst():
+    w, h = 16, 12
+    cum = sched.crop_trace(w, h, 3, 2, 2, 1)
+    R = Fraction(int(cum[-1]), w * h)
+    L, B = sched.fit_LB(cum, R)
+    t = np.arange(len(cum), dtype=np.int64)
+    model = sched.trace(R, L, 0, t)
+    assert np.all(model <= cum)
+    assert np.all(cum - model <= B)
+    assert B > 0                       # crop rows really are bursty
+
+
+def test_downsample_trace_fit_bounds_the_burst():
+    cum = sched.downsample_trace(12, 8, 2, 2)
+    R = Fraction(1, 4)
+    L, B = sched.fit_LB(cum, R)
+    t = np.arange(len(cum), dtype=np.int64)
+    model = sched.trace(R, L, 0, t)
+    assert np.all(model <= cum)
+    assert np.all(cum - model <= B)
+
+
+def test_invert_trace_roundtrip():
+    cum = sched.downsample_trace(8, 6, 2, 3)
+    need = sched.invert_trace(cum)
+    assert len(need) == int(cum[-1])
+    for j, i in enumerate(need, start=1):
+        assert cum[i - 1] >= j             # enough inputs by need[j]
+        assert i == 1 or cum[i - 2] < j    # and not one sooner
+
+
+def test_pad_need_trace_geometry():
+    """Pad(1,1,1,1) on 2x2: border pixels need only already-consumed
+    interior; each interior pixel needs its own input token."""
+    need = sched.pad_need_trace(2, 2, 1, 1, 1, 1)
+    assert need.tolist() == [0, 0, 0, 0,
+                             0, 1, 2, 2,
+                             2, 3, 4, 4,
+                             4, 4, 4, 4]
+    assert need[-1] == 2 * 2               # consumes exactly the input
+    assert np.all(np.diff(need) >= 0)

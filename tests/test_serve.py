@@ -270,6 +270,26 @@ def test_check_regression_logic():
                       "b": {"speedup_jax_vs_numpy": 1.4},   # -30%: regressed
                       "new": {"speedup_jax_vs_numpy": 9.0}}}
     rows, bad = find_regressions(base, fresh, threshold=0.25)
-    assert bad == ["b"]
+    assert bad == ["b:speedup_jax_vs_numpy"]
     assert any("REGRESSED" in r for r in rows)
     assert sum("skipped" in r for r in rows) == 2   # gone + new never fail
+    # serve metric absent from BOTH sides everywhere -> no extra rows at all
+    assert len(rows) == 4
+
+
+def test_check_regression_gates_serve_rows():
+    """The gate also covers serve throughput (nested dotted metric), and an
+    app with no committed serve baseline is skipped cleanly."""
+    from benchmarks.check_regression import find_regressions
+    base = {"apps": {
+        "a": {"speedup_jax_vs_numpy": 4.0,
+              "serve": {"throughput_x_vs_run": 10.0}},
+        "b": {"speedup_jax_vs_numpy": 2.0}}}           # no serve baseline
+    fresh = {"apps": {
+        "a": {"speedup_jax_vs_numpy": 4.0,
+              "serve": {"throughput_x_vs_run": 5.0}},  # -50%: regressed
+        "b": {"speedup_jax_vs_numpy": 2.0,
+              "serve": {"throughput_x_vs_run": 3.0}}}}  # new metric: skipped
+    rows, bad = find_regressions(base, fresh, threshold=0.25)
+    assert bad == ["a:serve.throughput_x_vs_run"]
+    assert any("no committed baseline" in r for r in rows)
