@@ -1,18 +1,26 @@
 """CI bench-regression gate.
 
-Compares a fresh ``benchmarks/run.py --json`` result against the committed
+Compares a fresh ``benchmarks/run.py`` result against the committed
 baseline (``git show HEAD:BENCH_kernels.json`` by default, so it works
 even after the fresh run has merge-updated the working-tree file) and
 fails when any app's gated metric regressed by more than ``--threshold``
 (default 25%). Two metrics are gated: the warm lowering speedup
 (``speedup_jax_vs_numpy``) and the serve throughput multiple
-(``serve.throughput_x_vs_run`` — dotted paths walk nested rows). An app
-with no committed baseline row for a metric is skipped cleanly: metrics
-absent from *both* sides produce no row at all, metrics present on only
-one side are reported but never fail the gate.
+(``serve.throughput_x_vs_run`` — dotted paths walk nested rows). Only
+metrics absent from *both* sides skip (no such row exists anywhere — the
+metric simply isn't tracked for that app); a metric present on exactly
+one side is a hard failure: a baseline row with no fresh value means a
+bench silently stopped producing the metric (the exact failure mode a
+regression gate exists to catch), and a fresh value with no baseline
+means the committed BENCH_kernels.json was not refreshed with the change
+that introduced it. For the stopped-producing direction to be reachable,
+``--fresh`` must point at a from-scratch document (``run.py
+--fresh-json``, as CI does) — gating the merge-updated working-tree file
+would let the stale committed value stand in for a vanished metric.
 
+    PYTHONPATH=src python -m benchmarks.run --json --fresh-json BENCH_fresh.json
     PYTHONPATH=src python -m benchmarks.check_regression \
-        --fresh BENCH_kernels.json [--baseline git|PATH] [--threshold 0.25]
+        --fresh BENCH_fresh.json [--baseline git|PATH] [--threshold 0.25]
 
 Exit status 1 on regression — wired into the tier1 CI job after the
 artifact upload.
@@ -56,11 +64,13 @@ def find_regressions(base: Dict[str, Any], fresh: Dict[str, Any],
                      threshold: float,
                      metrics: Sequence[str] = METRICS
                      ) -> Tuple[List[str], List[str]]:
-    """Returns (report_rows, regressed_names).  A metric regresses when its
-    fresh value drops below (1 - threshold) x baseline; metrics missing
-    from one side are reported but never fail the gate (new apps and new
-    metrics land without baselines), and metrics missing from both sides
-    are skipped silently."""
+    """Returns (report_rows, failed_names).  A metric regresses when its
+    fresh value drops below (1 - threshold) x baseline. Metrics missing
+    from BOTH sides are skipped silently (not tracked for that app);
+    one-sided-missing is a hard failure — a committed baseline with no
+    fresh value means a bench stopped producing the metric, and a fresh
+    value with no committed baseline means BENCH_kernels.json was not
+    refreshed alongside the change."""
     rows, bad = [], []
     base_apps = base.get("apps", {})
     fresh_apps = fresh.get("apps", {})
@@ -71,10 +81,14 @@ def find_regressions(base: Dict[str, Any], fresh: Dict[str, Any],
             if b is None and f is None:
                 continue
             if b is None or f is None:
-                reason = ("no committed baseline row" if b is None
-                          else "missing fresh row")
+                reason = ("fresh metric has no committed baseline row — "
+                          "commit a refreshed BENCH_kernels.json"
+                          if b is None else
+                          "baseline metric missing from the fresh run — "
+                          "a bench stopped producing it")
                 rows.append(f"{app:14s} {metric}: baseline={b} fresh={f} "
-                            f"(skipped: {reason})")
+                            f"MISSING ({reason})")
+                bad.append(f"{app}:{metric}")
                 continue
             floor = b * (1.0 - threshold)
             verdict = "OK" if f >= floor else "REGRESSED"
@@ -110,7 +124,8 @@ def main() -> int:
     print("\n".join(rows))
     if bad:
         print(f"FAIL: {len(bad)} metric(s) regressed >"
-              f"{args.threshold:.0%}: {', '.join(bad)}")
+              f"{args.threshold:.0%} or one-sided-missing: "
+              f"{', '.join(bad)}")
         return 1
     print("bench-regression gate: OK")
     return 0

@@ -16,6 +16,13 @@ def main() -> None:
     ap.add_argument("--json", action="store_true",
                     help="merge-update BENCH_kernels.json (backend wall "
                          "times + serve metrics, version-stamped)")
+    ap.add_argument("--fresh-json", default=None, metavar="PATH",
+                    help="additionally write a from-scratch document with "
+                         "ONLY this run's rows (no merge against committed "
+                         "values) — the regression gate compares it against "
+                         "the committed baseline so a bench that silently "
+                         "stops producing a gated metric hard-fails instead "
+                         "of being masked by the stale merged value")
     args = ap.parse_args()
     from benchmarks import (bench_fifo, bench_hls_analog, bench_hwsim,
                             bench_kernels, bench_lowering, bench_roofline,
@@ -38,15 +45,22 @@ def main() -> None:
         except Exception as e:  # keep the harness going; report the failure
             rows.append((f"FAILED_{name.split()[0]}", "0", repr(e)[:200]))
     json_failed = False
-    if args.json:
+    if args.json or args.fresh_json:
         print("# writing BENCH_kernels.json", file=sys.stderr, flush=True)
+        paths = (["BENCH_kernels.json"] if args.json else [])
+        if args.fresh_json:
+            import os
+            if os.path.exists(args.fresh_json):  # fresh = no stale rows
+                os.remove(args.fresh_json)
+            paths.append(args.fresh_json)
         for writer in (bench_lowering.write_json, bench_serve.write_json,
                        bench_hwsim.write_json):
-            try:
-                writer("BENCH_kernels.json")
-            except Exception as e:  # don't lose the CSV over a write failure
-                rows.append(("FAILED_json", "0", repr(e)[:200]))
-                json_failed = True
+            for path in paths:
+                try:
+                    writer(path)
+                except Exception as e:  # don't lose the CSV over a failure
+                    rows.append(("FAILED_json", "0", repr(e)[:200]))
+                    json_failed = True
     print("name,us_per_call,derived")
     for r in rows:
         print(",".join(str(x) for x in r))

@@ -41,6 +41,19 @@ class BufferSolution:
     total_bits: int
     solver: str
 
+    def with_depths(self, depth: Dict[Tuple[int, int], int],
+                    edges: Sequence[Edge],
+                    solver: Optional[str] = None) -> "BufferSolution":
+        """A copy of this solution with ``depth`` installed (and total_bits
+        recomputed from ``edges``): how the simulation-guided allocator's
+        proven depths replace the analytic ones in ``fifo_solver="sim"``
+        mode. Start offsets are untouched — shrinking capacity toward the
+        simulated high-water marks does not move the schedule."""
+        bits = {(e.src, e.dst): e.token_bits for e in edges}
+        total = sum(d * bits[k] for k, d in depth.items())
+        return BufferSolution(list(self.start), dict(self.slack),
+                              dict(depth), total, solver or self.solver)
+
 
 def solve_buffers(n_modules: int, edges: Sequence[Edge],
                   solver: str = "z3",

@@ -42,6 +42,11 @@ class HWDesign:
     out_val: Val
     notes: List[str] = field(default_factory=list)
     backend: str = "numpy"            # default run() backend
+    # fifo_solver="sim": the analytic depths the simulation-guided
+    # allocation replaced (report() shows the two areas side by side) and
+    # whether the shrink re-verified (False = reverted to analytic depths)
+    fifo_analytic: Optional[Dict[Tuple[int, int], int]] = None
+    fifo_sim_proven: Optional[bool] = None
     _lowered: Dict[str, Any] = field(default_factory=dict, repr=False)
     _serve_stats: List[Any] = field(default_factory=list, repr=False)
     _hwsim: List[Any] = field(default_factory=list, repr=False)
@@ -102,27 +107,34 @@ class HWDesign:
 
     def simulate(self, fifo_depths: Optional[Dict[Tuple[int, int], int]] = None,
                  unbounded: bool = False, max_cycles: Optional[int] = None,
-                 sample_every: int = 0):
+                 sample_every: int = 0, frames: int = 1,
+                 engine: str = "auto"):
         """Cycle-level dataflow simulation of the mapped module graph
         (repro/hwsim): valid/ready token handshakes over the solved FIFO
         depths (or ``fifo_depths`` overrides; ``unbounded=True`` removes
-        all capacity limits). Returns a SimResult with the frame's cycle
-        count, sink throughput, per-FIFO high-water marks and a deadlock
-        diagnosis. The latest result feeds ``report()``."""
+        all capacity limits). ``frames`` runs back-to-back frames (steady
+        state); ``engine`` picks the vectorized or scalar cycle engine.
+        Returns a SimResult with the run's cycle count, sink throughput,
+        per-FIFO high-water marks and a deadlock diagnosis. The latest
+        result feeds ``report()``."""
         from ..hwsim import simulate as _simulate  # lazy, like serve/lower
         res = _simulate(self, fifo_depths=fifo_depths, unbounded=unbounded,
-                        max_cycles=max_cycles, sample_every=sample_every)
+                        max_cycles=max_cycles, sample_every=sample_every,
+                        frames=frames, engine=engine)
         self._hwsim[:] = [res]
         return res
 
     def optimize_fifos(self, guard: int = 0,
-                       max_cycles: Optional[int] = None):
+                       max_cycles: Optional[int] = None, frames: int = 1,
+                       engine: str = "auto"):
         """Simulation-guided FIFO allocation (repro/hwsim.allocate): shrink
         every FIFO from its analytic depth to the simulated high-water mark
         (+``guard``), re-simulate to prove the frame time is unchanged, and
-        return the AllocationResult. The result feeds ``report()``."""
+        return the AllocationResult (``frames > 1`` sizes against the
+        steady state). The result feeds ``report()``."""
         from ..hwsim import allocate_fifos
-        alloc = allocate_fifos(self, guard=guard, max_cycles=max_cycles)
+        alloc = allocate_fifos(self, guard=guard, max_cycles=max_cycles,
+                               frames=frames, engine=engine)
         self._hwsim[:] = [alloc]
         return alloc
 
@@ -223,6 +235,20 @@ class HWDesign:
                  f"cycles/frame={self.cycles_per_frame()}",
                  f" fifo_bits={self.fifo.total_bits if self.fifo else 0} "
                  f"(solver={self.fifo.solver if self.fifo else '-'})"]
+        if self.fifo_analytic is not None and self.fifo is not None:
+            # fifo_solver="sim": analytic vs simulation-proven, side by side
+            from ..hwsim import area_units, fifo_area
+            bits = {(e.src, e.dst): e.token_bits for e in self.edges}
+            ana_bits = sum(d * bits[k]
+                           for k, d in self.fifo_analytic.items())
+            verdict = ("proven by re-simulation" if self.fifo_sim_proven
+                       else "NOT PROVEN — reverted to analytic depths")
+            lines.append(
+                f" fifo solve: analytic bits={ana_bits} "
+                f"area={area_units(fifo_area(self.fifo_analytic, self.edges))}u"
+                f"  ->  simulated bits={self.fifo.total_bits} "
+                f"area={area_units(fifo_area(self.fifo.depth, self.edges))}u "
+                f"({verdict})")
         for i, m in enumerate(self.modules):
             s = self.fifo.start[i] if self.fifo else 0
             lines.append(f"  [{i:3d}] s={s:6d} {m!r}")
@@ -242,10 +268,18 @@ def compile_pipeline(uf: UserFunction, T: Fraction = Fraction(1),
                      include_burst: bool = True,
                      manual_fifo_overrides: Optional[Dict[str, int]] = None,
                      backend: str = "numpy",
+                     sim_frames: int = 2,
+                     sim_guard: int = 0,
                      ) -> HWDesign:
     """The full HWTool flow for one pipeline at target throughput T.
 
-    ``fifo_solver``: "z3" (paper), "lp", or "asap".
+    ``fifo_solver``: "z3" (paper), "lp", "asap", or "sim" — measured, not
+    bounded, buffering (paper §7.3): solve analytically (z3), then run the
+    cycle simulator over ``sim_frames`` back-to-back frames, shrink every
+    FIFO to its steady-state high-water mark (+``sim_guard``), re-simulate
+    to prove the run time unchanged, and install the proven depths in the
+    returned design (``report()`` shows analytic vs simulated side by
+    side; the analytic depths stay available as ``fifo_analytic``).
     ``include_burst=False`` + overrides reproduce *manual* FIFO allocation
     (paper §7.2/§7.3): the user zeroes burst slack on modules whose bursts
     are absorbed elsewhere (e.g. pad/crop backed by AXI DMA).
@@ -255,6 +289,9 @@ def compile_pipeline(uf: UserFunction, T: Fraction = Fraction(1),
     """
     if backend not in ("numpy", "jax", "pallas"):
         raise ValueError(f"unknown backend {backend!r}")
+    sim_solver = fifo_solver == "sim"
+    if sim_solver:
+        fifo_solver = "z3"        # the analytic solve the simulation tightens
     T = Fraction(T)
     inp, out = uf.build()
     kind = solve_interface(out)
@@ -383,6 +420,19 @@ def compile_pipeline(uf: UserFunction, T: Fraction = Fraction(1),
         notes.append(f"SDF normalization: requested T={float(T):.4g} -> "
                      f"effective T={float(T_eff):.4g} (max ratio "
                      f"{float(max_ratio):.5g})")
-    return HWDesign(uf.name, T_eff, kind, modules, edges, fifo, out_mod,
-                    out_sched.tokens_per_frame, inp, out, notes,
-                    backend=backend)
+    design = HWDesign(uf.name, T_eff, kind, modules, edges, fifo, out_mod,
+                      out_sched.tokens_per_frame, inp, out, notes,
+                      backend=backend)
+    if sim_solver:
+        # measured-not-bounded FIFO sizing (§7.3): simulate, shrink to the
+        # steady-state high-water marks, prove, install
+        alloc = design.optimize_fifos(guard=sim_guard, frames=sim_frames)
+        design.fifo_analytic = dict(alloc.analytic)
+        design.fifo_sim_proven = alloc.proven
+        design.fifo = fifo.with_depths(alloc.depths, edges, solver="sim")
+        design.notes.append(
+            f"fifo_solver=sim: {alloc.shrunk_edges}/{len(alloc.depths)} "
+            f"FIFOs shrunk over {sim_frames} simulated frame(s), "
+            f"{fifo.total_bits} -> {design.fifo.total_bits} bits "
+            f"({'proven' if alloc.proven else 'NOT PROVEN — reverted'})")
+    return design

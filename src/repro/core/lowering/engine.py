@@ -57,6 +57,31 @@ def _spec(v) -> Any:
     return (a.shape, str(a.dtype))
 
 
+_FMA_PROBE: Dict[str, bool] = {}
+
+
+def backend_contracts_fma() -> bool:
+    """Runtime probe: does the active XLA backend contract an f32 multiply
+    feeding an add/subtract into a fused FMA inside one compiled program?
+
+    The partitioner used to hardcode the XLA:CPU answer (yes —
+    ``AllowFPOpFusion::Fast`` survives every flag we tried); this probe
+    measures it instead, so the partition rule tracks the actual backend
+    (ROADMAP "known gaps": TPU rounds differently and needs revalidation).
+    The test is the classic residual: with x = 1 + 2^-12 in f32 and p the
+    f32-rounded x*x, the IEEE two-step x*x - p is exactly 0, while a fused
+    fma(x, x, -p) returns the true rounding residual 2^-24."""
+    key = jax.default_backend()
+    if key not in _FMA_PROBE:
+        x = np.float32(1.0 + 2.0 ** -12)
+        p = np.float32(x * x)
+        with enable_x64():
+            r = jax.jit(lambda a, b: a * a - b)(jnp.float32(x),
+                                                jnp.float32(p))
+        _FMA_PROBE[key] = bool(np.asarray(r) != np.float32(0.0))
+    return _FMA_PROBE[key]
+
+
 def _has_float(ty) -> bool:
     if isinstance(ty, TupleT):
         return any(_has_float(t) for t in ty.elems)
@@ -182,8 +207,12 @@ class CompiledPipeline:
         """Greedy maximal segments: a segment closes only when the next node
         is an f32 add/sub consuming a value that an f32 multiply *in the
         same segment* produced (directly or through data movement) — the one
-        adjacency XLA:CPU would contract into an FMA.  Integer pipelines
-        compile to a single whole-pipeline program."""
+        adjacency a contracting backend would fuse into an FMA.  Whether the
+        active backend actually contracts is probed at runtime
+        (``backend_contracts_fma``), not assumed: on a non-contracting
+        backend every pipeline compiles to a single whole-pipeline program.
+        Integer pipelines never split either way."""
+        split_fma = backend_contracts_fma()
         body = [n for n in self.ir.order if n.op != "Input"]
         groups: List[List[IRNode]] = []
         cur: List[IRNode] = []
@@ -191,7 +220,7 @@ class CompiledPipeline:
         for n in body:
             kind = _float_kind(n)
             ins = self.ir.effective_inputs(n)
-            if (kind in ("addsub", "unknown")
+            if (split_fma and kind in ("addsub", "unknown")
                     and any(taint.get(u, False) for u in ins) and cur):
                 groups.append(cur)      # program boundary materializes the
                 cur = []                # product before the add sees it

@@ -41,6 +41,7 @@ class AllocationResult:
     guard: int
     notes: List[str] = field(default_factory=list)
     reverted: bool = False              # verification failed; depths=analytic
+    frames: int = 1                     # frames per simulated run
 
     @property
     def proven(self) -> bool:
@@ -61,7 +62,8 @@ class AllocationResult:
 
     def report_lines(self) -> List[str]:
         lines = [f"simulated allocation: {self.shrunk_edges}/"
-                 f"{len(self.depths)} FIFOs shrunk (guard={self.guard}), "
+                 f"{len(self.depths)} FIFOs shrunk (guard={self.guard}, "
+                 f"frames={self.frames}, engine={self.baseline.engine}), "
                  f"throughput {'unchanged' if self.proven else 'CHANGED'}"]
         for k in sorted(self.depths):
             if self.depths[k] != self.analytic[k]:
@@ -72,18 +74,23 @@ class AllocationResult:
 
 
 def allocate_fifos(design, guard: int = 0,
-                   max_cycles: Optional[int] = None) -> AllocationResult:
+                   max_cycles: Optional[int] = None, frames: int = 1,
+                   engine: str = "auto") -> AllocationResult:
     """Shrink ``design``'s FIFO allocation to simulated high-water marks.
 
-    Starts from the analytic (solver) depths, simulates one frame, sets each
-    FIFO to ``min(analytic, max(hwm - 1 + guard, burst_floor))``, keeps the
+    Starts from the analytic (solver) depths, simulates ``frames``
+    back-to-back frames (multi-frame runs measure the steady state:
+    inter-frame FIFO residue and crop drain can push marks above the
+    single-frame ones), sets each FIFO to
+    ``min(analytic, max(hwm - 1 + guard, burst_floor))``, keeps the
     analytic depth where shrinking would increase area (SRL-vs-BRAM
-    inversion), then re-simulates to prove the frame time is bit-identical.
+    inversion), then re-simulates to prove the run time is bit-identical.
     Raises RuntimeError if the baseline simulation deadlocks (the analytic
     allocation itself is broken — nothing to tighten)."""
     if design.fifo is None:
         raise RuntimeError("design has no FIFO solution to tighten")
-    baseline = simulate(design, max_cycles=max_cycles)
+    baseline = simulate(design, max_cycles=max_cycles, frames=frames,
+                        engine=engine)
     if not baseline.completed:
         raise RuntimeError(
             f"baseline simulation deadlocked: {baseline.deadlock}")
@@ -104,9 +111,10 @@ def allocate_fifos(design, guard: int = 0,
                          "for costlier SRLs)")
             want = d_ana
         depths[key] = want
-    verified = simulate(design, fifo_depths=depths, max_cycles=max_cycles)
+    verified = simulate(design, fifo_depths=depths, max_cycles=max_cycles,
+                        frames=frames, engine=engine)
     alloc = AllocationResult(depths, analytic, baseline, verified, guard,
-                             notes)
+                             notes, frames=frames)
     if not alloc.proven:
         # cannot happen for a capacity >= observed-hwm shrink of a
         # deterministic run; if it does, the simulator itself is broken —

@@ -24,6 +24,10 @@ class EdgeOccupancy:
     pushed: int
     popped: int
     token_bits: int
+    # frame during which the high-water mark was first reached (frames fully
+    # drained at the sink as of that cycle) — multi-frame steady-state runs
+    # can first reach their mark in a later frame than cycle 0's
+    hwm_frame: int = 0
 
     @property
     def needed_depth(self) -> int:
@@ -63,7 +67,8 @@ class OccupancyTrace:
             cap = "inf" if e.depth is None else str(e.depth)
             lines.append(
                 f"fifo {name(e.key[0])}->{name(e.key[1])}: "
-                f"hwm={e.hwm} (depth {cap}) at cycle {e.hwm_cycle}, "
+                f"hwm={e.hwm} (depth {cap}) at cycle {e.hwm_cycle} "
+                f"frame {e.hwm_frame}, "
                 f"{e.pushed} pushed / {e.popped} popped")
         return lines
 

@@ -23,14 +23,31 @@ Model, per cycle:
 Token payloads are not modeled — only counts move, which is all FIFO sizing
 needs. Deadlock/starvation is detected as a sustained absence of token
 movement and reported with a per-module blocked/starved diagnosis.
+
+Two engines implement the identical cycle semantics: this module's scalar
+Python loop (``engine="scalar"``, the reference) and the vectorized
+numpy/XLA engine in ``hwsim.vector`` (``engine="vector"``, the default via
+``simulate``), which packs the per-module/per-edge state into arrays and
+advances every module and edge per cycle as array ops. Both consume the
+same per-edge ``NeedSpec``s, so their high-water marks and cycle counts are
+bit-identical (cross-checked in tests and the ``hwsim-smoke`` CI gate).
+
+Multi-frame runs (``frames=N``) launch N back-to-back frames through the
+same netlist: every need function repeats per frame with a cumulative
+offset, so FIFO residue left by one frame (e.g. a Crop's dropped trailing
+border, never needed within its own frame) is drained by the next frame's
+early consumption — the steady-state high-water marks this measures can
+exceed the single-frame marks.
 """
 from __future__ import annotations
 
 import math
 from collections import deque
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from fractions import Fraction
 from typing import Callable, Dict, List, Mapping, Optional, Sequence, Tuple
+
+import numpy as np
 
 from ..core import schedule as sched
 from ..core.buffers import Edge
@@ -50,7 +67,7 @@ UNEXERCISED_BURSTY = ("Filter", "SparseTake", "External")
 
 
 class _SimEdge:
-    __slots__ = ("idx", "key", "cap", "occ", "hwm", "hwm_cycle",
+    __slots__ = ("idx", "key", "cap", "occ", "hwm", "hwm_cycle", "hwm_frame",
                  "pushed", "popped", "token_bits")
 
     def __init__(self, idx: int, key: EdgeKey, cap: Optional[int],
@@ -61,6 +78,7 @@ class _SimEdge:
         self.occ = 0
         self.hwm = 0
         self.hwm_cycle = 0
+        self.hwm_frame = 0
         self.pushed = 0
         self.popped = 0
         self.token_bits = token_bits
@@ -88,7 +106,10 @@ class _SimMod:
         self.pushed = 0
         self.inflight: deque = deque()
         self.credit = 0
-        self._need_k = 0
+        # None sentinel, NOT 0: launches happen to start at k=1 today, but a
+        # 0 sentinel would silently return the stale empty list for a future
+        # needs(0) call (regression-tested in tests/test_hwsim.py)
+        self._need_k: Optional[int] = None
         self._need_v: List[int] = []
 
     def needs(self, k: int) -> List[int]:
@@ -100,13 +121,19 @@ class _SimMod:
 
 @dataclass
 class SimResult:
-    """One simulated frame: cycle count, sink throughput, per-FIFO occupancy
-    high-water marks, and a deadlock diagnosis (None = completed)."""
+    """One simulated run (``frames`` back-to-back frames): cycle count, sink
+    throughput, per-FIFO occupancy high-water marks (steady-state marks when
+    ``frames > 1``), and a deadlock diagnosis (None = completed).
+    ``frame_ends[i]`` is the cycle during which the sink absorbed frame i's
+    last token; ``engine`` names the engine that produced the result."""
 
     cycles: int
     sink_tokens: int
     deadlock: Optional[str]
     occupancy: OccupancyTrace
+    frames: int = 1
+    frame_ends: List[int] = field(default_factory=list)
+    engine: str = "scalar"
 
     @property
     def completed(self) -> bool:
@@ -114,7 +141,7 @@ class SimResult:
 
     @property
     def throughput(self) -> Fraction:
-        """Sink tokens per cycle over the simulated frame."""
+        """Sink tokens per cycle over the simulated run."""
         if self.cycles <= 0:
             return Fraction(0)
         return Fraction(self.sink_tokens, self.cycles)
@@ -122,9 +149,18 @@ class SimResult:
     def hwm_by_key(self) -> Dict[EdgeKey, int]:
         return self.occupancy.hwm_by_key()
 
+    def edge_signature(self) -> List[Tuple]:
+        """Canonical per-edge comparison tuple for engine-equivalence
+        checks — the single definition of "bit-identical" that both the
+        test suite and the hwsim-smoke CI gate compare: high-water mark,
+        its (cycle, frame) stamps, and push/pop totals per edge."""
+        return sorted((e.key, e.hwm, e.hwm_cycle, e.hwm_frame, e.pushed,
+                       e.popped) for e in self.occupancy.per_edge)
+
     def report_lines(self) -> List[str]:
         status = "ok" if self.completed else f"DEADLOCK: {self.deadlock}"
         lines = [f"cycles={self.cycles} sink_tokens={self.sink_tokens} "
+                 f"frames={self.frames} engine={self.engine} "
                  f"throughput={float(self.throughput):.4g} tok/cyc  {status}"]
         lines.extend(self.occupancy.report_lines())
         return lines
@@ -138,13 +174,70 @@ def _ceil_div(a: int, b: int) -> int:
     return -(-a // b)
 
 
-def _need_profile(cons: RModule, prod: RModule, tpf_e: int) -> Optional[
-        Callable[[int], int]]:
-    """Exact token-level need function for the profiled border ops, from
-    their pixel-level schedule traces (core/schedule.py)."""
+@dataclass(frozen=True)
+class NeedSpec:
+    """Per-edge consumption spec shared by both engines: how many producer
+    tokens (cumulative, within one frame) the consumer must have received
+    before it can launch its k-th within-frame output. ``profile`` is the
+    consumer's cumulative pixel-need trace for the profiled border ops
+    (None = smooth proportional consumption)."""
+
+    tpf: int                 # producer tokens per frame on this edge
+    out_total: int           # consumer output tokens per frame
+    profile: Optional[np.ndarray] = None   # cumulative need_px, len = out px
+    v_out: int = 1
+    pxs_out: int = 1
+    v_in: int = 1
+    pxs_in: int = 1
+
+    def need_frame(self, k: int) -> int:
+        """Tokens needed before within-frame output k (1 <= k <= out_total)."""
+        if self.profile is None:
+            return min(self.tpf, _ceil_div(k * self.tpf, self.out_total))
+        p = min(len(self.profile), _ceil_div(k * self.v_out, self.pxs_out))
+        if p <= 0:
+            return 0
+        npx = int(self.profile[p - 1])
+        return min(self.tpf, _ceil_div(npx * self.pxs_in, self.v_in))
+
+    def need_fn(self, frames: int = 1) -> Callable[[int], int]:
+        """The scalar engine's closure: per-frame needs repeat with a
+        cumulative ``tpf`` offset, so frame f's first outputs require
+        (and therefore drain) everything frames 0..f-1 produced —
+        including residue the earlier frames never consumed."""
+        if frames == 1:
+            return self.need_frame
+
+        ot, tpf = self.out_total, self.tpf
+
+        def need(k: int) -> int:
+            f, kf = divmod(k - 1, ot)
+            return f * tpf + self.need_frame(kf + 1)
+
+        return need
+
+    def need_array(self) -> np.ndarray:
+        """Within-frame needs for k = 1..out_total as one int64 vector (the
+        vectorized engine's lookup table; multi-frame offsets are applied
+        arithmetically in the kernel)."""
+        k = np.arange(1, self.out_total + 1, dtype=np.int64)
+        if self.profile is None:
+            return np.minimum(self.tpf, -((-k * self.tpf) // self.out_total))
+        p = np.minimum(len(self.profile),
+                       -((-k * self.v_out) // self.pxs_out))
+        npx = np.asarray(self.profile, dtype=np.int64)[p - 1]
+        need = np.minimum(self.tpf, -((-npx * self.pxs_in) // self.v_in))
+        return np.where(p <= 0, 0, need)
+
+
+def need_spec(cons: RModule, prod: RModule, tpf_e: int) -> NeedSpec:
+    """Build the edge's NeedSpec: an exact pixel-level profile for the
+    bursty border ops (from their core/schedule.py traces), proportional
+    consumption otherwise."""
     geom = cons.info.get("geom")
+    out_total = cons.iface_out.sched.tokens_per_frame
     if cons.kind not in PROFILED or not geom:
-        return None
+        return NeedSpec(tpf_e, out_total)
     w, h = geom["in_w"], geom["in_h"]
     if cons.kind == "Pad":
         need_px = sched.pad_need_trace(w, h, geom["l"], geom["r"],
@@ -156,27 +249,17 @@ def _need_profile(cons: RModule, prod: RModule, tpf_e: int) -> Optional[
     else:  # Downsample
         need_px = sched.invert_trace(
             sched.downsample_trace(w, h, geom["sx"], geom["sy"]))
-    total_out_px = len(need_px)
-    v_out = cons.iface_out.sched.v
-    pxs_out = cons.iface_out.sched.px_scalars
-    v_in = prod.iface_out.sched.v
-    pxs_in = prod.iface_out.sched.px_scalars
-
-    def need(k: int) -> int:
-        p = min(total_out_px, _ceil_div(k * v_out, pxs_out))
-        if p <= 0:
-            return 0
-        npx = int(need_px[p - 1])
-        return min(tpf_e, _ceil_div(npx * pxs_in, v_in))
-
-    return need
+    return NeedSpec(tpf_e, out_total, profile=need_px,
+                    v_out=cons.iface_out.sched.v,
+                    pxs_out=cons.iface_out.sched.px_scalars,
+                    v_in=prod.iface_out.sched.v,
+                    pxs_in=prod.iface_out.sched.px_scalars)
 
 
 def _need_proportional(tpf_e: int, out_total: int) -> Callable[[int], int]:
-    def need(k: int) -> int:
-        return min(tpf_e, _ceil_div(k * tpf_e, out_total))
-
-    return need
+    """Back-compat helper (hand-built test graphs): smooth proportional
+    single-frame needs."""
+    return NeedSpec(tpf_e, out_total).need_fn()
 
 
 # --------------------------------------------------------------------------
@@ -185,10 +268,14 @@ def _need_proportional(tpf_e: int, out_total: int) -> Callable[[int], int]:
 
 def build_sim(modules: Sequence[RModule], edges: Sequence[Edge],
               depths: Mapping[EdgeKey, int],
-              unbounded: bool = False) -> "CycleSim":
+              unbounded: bool = False, frames: int = 1) -> "CycleSim":
     """Build a CycleSim over a mapped module netlist. ``depths`` maps
     (src, dst) module indices to FIFO depths; simulated capacity is
-    depth + 1 (the producer's output register counts as one slot)."""
+    depth + 1 (the producer's output register counts as one slot).
+    ``frames`` launches that many back-to-back frames (out_totals scale,
+    needs repeat per frame with cumulative offsets)."""
+    if frames < 1:
+        raise ValueError("frames must be >= 1")
     mods: List[_SimMod] = []
     for i, m in enumerate(modules):
         out_total = m.iface_out.sched.tokens_per_frame
@@ -196,8 +283,9 @@ def build_sim(modules: Sequence[RModule], edges: Sequence[Edge],
                      and 0 < Fraction(m.rate) < 1)
         rate = Fraction(m.rate) if m.rate > 0 else Fraction(1)
         mods.append(_SimMod(i, m.name, m.kind, rate, m.latency,
-                            out_total, throttled))
+                            out_total * frames, throttled))
     sim_edges: List[_SimEdge] = []
+    specs: List[NeedSpec] = []
     for ei, e in enumerate(edges):
         key = (e.src, e.dst)
         cap = None if unbounded else int(depths.get(key, 0)) + 1
@@ -205,12 +293,12 @@ def build_sim(modules: Sequence[RModule], edges: Sequence[Edge],
         sim_edges.append(se)
         prod, cons = modules[e.src], modules[e.dst]
         tpf_e = prod.iface_out.sched.tokens_per_frame
-        need = (_need_profile(cons, prod, tpf_e)
-                or _need_proportional(tpf_e, mods[e.dst].out_total))
-        mods[e.dst].in_edges.append((se, need))
+        spec = need_spec(cons, prod, tpf_e)
+        specs.append(spec)
+        mods[e.dst].in_edges.append((se, spec.need_fn(frames)))
         mods[e.dst].consumed.append(0)
         mods[e.src].out_edges.append(se)
-    return CycleSim(mods, sim_edges)
+    return CycleSim(mods, sim_edges, frames=frames, specs=specs)
 
 
 # --------------------------------------------------------------------------
@@ -223,14 +311,21 @@ class CycleSim:
     (B) modules consume from in-edges toward their next output's needs and
     launch it when needs + rate credit allow."""
 
-    def __init__(self, mods: List[_SimMod], edges: List[_SimEdge]):
+    def __init__(self, mods: List[_SimMod], edges: List[_SimEdge],
+                 frames: int = 1, specs: Optional[List[NeedSpec]] = None):
         self.mods = mods
         self.edges = edges
+        self.frames = frames
+        self.specs = specs          # per-edge NeedSpecs (vector engine reuse)
         # only modules that participate in the dataflow are stepped: Const
         # register banks (no edges at all) are always-valid and never move
         self.active = [m for m in mods if m.in_edges or m.out_edges]
         self.sinks = [m for m in self.active
                       if m.in_edges and not m.out_edges]
+        # frame accounting is anchored at the first sink: a frame "ends"
+        # the cycle its last token is absorbed there
+        self.frame_tokens = (self.sinks[0].out_total // frames
+                             if self.sinks else 0)
 
     def _stall_limit(self) -> int:
         max_l = max((m.latency for m in self.active), default=0)
@@ -252,13 +347,19 @@ class CycleSim:
         t = 0
         last_progress = 0
         samples: List[Tuple[int, List[int]]] = []
+        frame_ends: List[int] = []
+        sink0 = self.sinks[0] if self.sinks else None
         while not all(s.launched >= s.out_total for s in self.sinks):
             if t >= horizon:
                 return self._result(t, f"horizon exceeded ({horizon} cycles)",
-                                    samples)
+                                    samples, frame_ends)
             if t - last_progress > stall_limit:
-                return self._result(t, self._diagnose(), samples)
+                return self._result(t, self._diagnose(), samples, frame_ends)
             progress = False
+            # frames fully drained at the first sink as of the start of this
+            # cycle — the frame stamp for high-water marks reached at t
+            gframe = (sink0.launched // self.frame_tokens
+                      if sink0 and self.frame_tokens else 0)
             # --- phase A: matured tokens push downstream ---
             for m in self.active:
                 fl = m.inflight
@@ -277,6 +378,7 @@ class CycleSim:
                             if e.occ > e.hwm:
                                 e.hwm = e.occ
                                 e.hwm_cycle = t
+                                e.hwm_frame = gframe
                         progress = True
             if sample_every and t % sample_every == 0:
                 samples.append((t, [e.occ for e in self.edges]))
@@ -307,10 +409,14 @@ class CycleSim:
                 elif ready:
                     self._launch(m, t)
                     progress = True
+            if sink0 and self.frame_tokens:
+                while (len(frame_ends) <
+                       sink0.launched // self.frame_tokens):
+                    frame_ends.append(t)
             if progress:
                 last_progress = t
             t += 1
-        return self._result(t, None, samples)
+        return self._result(t, None, samples, frame_ends)
 
     @staticmethod
     def _launch(m: _SimMod, t: int) -> None:
@@ -338,16 +444,18 @@ class CycleSim:
         return "; ".join(why) or "no token movement"
 
     def _result(self, t: int, deadlock: Optional[str],
-                samples: List[Tuple[int, List[int]]]) -> SimResult:
+                samples: List[Tuple[int, List[int]]],
+                frame_ends: Optional[List[int]] = None) -> SimResult:
         per_edge = [EdgeOccupancy(e.key, None if e.cap is None else e.cap - 1,
                                   e.hwm, e.hwm_cycle, e.pushed, e.popped,
-                                  e.token_bits)
+                                  e.token_bits, hwm_frame=e.hwm_frame)
                     for e in self.edges]
         occ = OccupancyTrace(per_edge, t,
                              sample_cycles=[s[0] for s in samples],
                              samples=[s[1] for s in samples] or None)
         sink_tokens = sum(s.launched for s in self.sinks)
-        return SimResult(t, sink_tokens, deadlock, occ)
+        return SimResult(t, sink_tokens, deadlock, occ, frames=self.frames,
+                         frame_ends=list(frame_ends or []), engine="scalar")
 
 
 # --------------------------------------------------------------------------
@@ -356,15 +464,32 @@ class CycleSim:
 
 def simulate(design, fifo_depths: Optional[Mapping[EdgeKey, int]] = None,
              unbounded: bool = False, max_cycles: Optional[int] = None,
-             sample_every: int = 0) -> SimResult:
-    """Simulate one frame through ``design`` (an HWDesign).
+             sample_every: int = 0, frames: int = 1,
+             engine: str = "auto") -> SimResult:
+    """Simulate ``frames`` back-to-back frames through ``design``
+    (an HWDesign).
 
     ``fifo_depths`` overrides the design's solved per-edge depths (missing
     keys fall back to the analytic solution); ``unbounded=True`` removes all
     capacity limits, so the recorded high-water marks are the pipeline's
-    true dynamic buffering requirement."""
+    true dynamic buffering requirement. ``engine`` selects the cycle engine:
+    "vector" (numpy/XLA packed-state, the fast path), "scalar" (the
+    reference Python loop), or "auto" (vector unless an occupancy time
+    series was requested — sampling is scalar-only)."""
     depths: Dict[EdgeKey, int] = dict(design.fifo.depth) if design.fifo else {}
     if fifo_depths:
         depths.update(fifo_depths)
-    sim = build_sim(design.modules, design.edges, depths, unbounded=unbounded)
+    if engine == "auto":
+        engine = "scalar" if sample_every else "vector"
+    if engine == "vector":
+        if sample_every:
+            raise ValueError("occupancy sampling requires engine='scalar'")
+        from .vector import VectorSim  # lazy: keeps scalar flows jax-free
+        return VectorSim(design.modules, design.edges, depths,
+                         unbounded=unbounded,
+                         frames=frames).run(max_cycles=max_cycles)
+    if engine != "scalar":
+        raise ValueError(f"unknown engine {engine!r}")
+    sim = build_sim(design.modules, design.edges, depths,
+                    unbounded=unbounded, frames=frames)
     return sim.run(max_cycles=max_cycles, sample_every=sample_every)

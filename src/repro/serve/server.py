@@ -70,6 +70,11 @@ class ServeStats:
     devices: int = 1
     latencies: collections.deque = field(
         default_factory=lambda: collections.deque(maxlen=8192))
+    # cycle-simulated ingest-FIFO prediction (FrameServer.simulate_ingest):
+    # the hwsim engine replays the observed arrival/service rates with
+    # Poisson arrivals and predicts the request queue's high-water mark
+    predicted_queue_hw: Optional[int] = None
+    predicted_rho: Optional[float] = None
 
     def latency_quantiles(self) -> Dict[str, float]:
         """p50/p99 end-to-end frame latency in seconds (0.0 if idle)."""
@@ -84,6 +89,11 @@ class ServeStats:
     def report_lines(self) -> List[str]:
         q = self.latency_quantiles()
         mean_b = self.batch_frames / self.batches if self.batches else 0.0
+        predicted = ""
+        if self.predicted_queue_hw is not None:
+            predicted = (f" (simulated poisson ingest: predicted "
+                         f"hwm={self.predicted_queue_hw}, "
+                         f"rho={self.predicted_rho:.2f})")
         return [
             f"frames in={self.frames_in} out={self.frames_out} "
             f"devices={self.devices}",
@@ -91,7 +101,7 @@ class ServeStats:
             f"deadline={self.deadline_flushes}) mean_batch={mean_b:.2f} "
             f"max_batch={self.max_batch_seen} "
             f"padded_frames={self.padded_frames}",
-            f"fifo occupancy: request hw={self.queue_hw} "
+            f"fifo occupancy: request hw={self.queue_hw}{predicted} "
             f"bucket hw={self.bucket_hw} inflight hw={self.inflight_hw}",
             f"latency p50={q['p50'] * 1e3:.2f}ms p99={q['p99'] * 1e3:.2f}ms",
         ]
@@ -141,6 +151,7 @@ class FrameServer:
     def start(self) -> "FrameServer":
         if self._thread is not None:
             return self
+        self._t0 = time.perf_counter()
         self._thread = threading.Thread(target=self._loop_main,
                                         name="frame-server", daemon=True)
         self._thread.start()
@@ -199,6 +210,39 @@ class FrameServer:
         for s in sizes:
             reqs = [FrameRequest(name, inputs, sig, now) for _ in range(s)]
             a.dispatcher.submit(reqs, pad_to=s).wait()
+
+    def simulate_ingest(self, service_fps: Optional[float] = None,
+                        arrival_fps: Optional[float] = None,
+                        frames: int = 512, seed: int = 0,
+                        mean_gap_cycles: float = 64.0):
+        """Predict the request FIFO's steady-state occupancy by replaying
+        the observed arrival/service rates through the hwsim cycle engine
+        (repro/hwsim/ingest) with seeded Poisson arrivals.
+
+        ``arrival_fps`` defaults to the observed ingest rate
+        (frames_in / wall time since start); ``service_fps`` defaults to
+        the observed egress rate — pass the measured batch throughput
+        (e.g. bench_serve's serve_fps) for a sharper service model. The
+        service rate is floored at 1/1024 frames/cycle: below that the
+        queue is pinned at capacity regardless (and the cycle loop would
+        otherwise grind for minutes — e.g. calling this before any frame
+        completed makes the observed egress rate collapse to ~0). The
+        prediction lands in ``stats.predicted_queue_hw`` next to the
+        observed ``queue_hw`` and is returned as an IngestResult."""
+        from fractions import Fraction
+
+        from ..hwsim.ingest import simulate_ingest as _sim
+        elapsed = max(time.perf_counter() - getattr(self, "_t0", 0.0), 1e-9)
+        arrival = arrival_fps or max(self.stats.frames_in / elapsed, 1e-9)
+        service = service_fps or max(self.stats.frames_out / elapsed, 1e-9)
+        rate = Fraction(service / arrival / mean_gap_cycles
+                        ).limit_denominator(10 ** 6)
+        rate = min(max(rate, Fraction(1, 1024)), Fraction(1))
+        res = _sim(frames, mean_gap_cycles, rate,
+                   capacity=self.config.max_queue, seed=seed)
+        self.stats.predicted_queue_hw = res.hwm
+        self.stats.predicted_rho = res.utilization
+        return res
 
     def close(self) -> None:
         """Flush pending buckets, drain inflight batches, stop the loop."""

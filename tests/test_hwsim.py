@@ -3,15 +3,19 @@
 The simulator is the dynamic mirror of the analytic schedule solve: these
 tests pin token conservation, throughput consistency, deadlock/starvation
 detection, and the allocator's shrink-and-prove contract on the paper's
-four apps at small frame sizes.
+four apps at small frame sizes — plus the vectorized engine's bit-exact
+equivalence to the scalar reference (both backends), multi-frame
+steady-state marks, and the ``fifo_solver="sim"`` compile path.
 """
 from fractions import Fraction
 
+import numpy as np
 import pytest
 
 from repro.apps import SIM_CASES
 from repro.core import compile_pipeline
-from repro.hwsim import allocate_fifos, area_units, compare, fifo_area
+from repro.hwsim import VectorSim, allocate_fifos, area_units, compare, \
+    fifo_area
 from repro.hwsim.sim import (CycleSim, _need_proportional, _SimEdge,
                              _SimMod, simulate)
 
@@ -137,6 +141,206 @@ def test_unbounded_sim_matches_bounded_throughput(designs):
         bounded = simulate(design)
         free = simulate(design, unbounded=True)
         assert bounded.cycles == free.cycles
+
+
+# ---- vectorized engine: bit-exact equivalence with the scalar model ----
+
+
+def _edge_sig(res):
+    """The engine-equivalence contract lives on SimResult so the tests and
+    the hwsim-smoke CI gate compare the same fields."""
+    return res.edge_signature()
+
+
+@pytest.mark.parametrize("name", PAPER_APPS)
+@pytest.mark.parametrize("frames", [1, 2])
+def test_vector_engine_bit_identical_to_scalar(designs, name, frames):
+    """Cross-check the packed-state engine (both its jit and numpy
+    backends) against the scalar reference: identical cycle counts,
+    per-FIFO high-water marks, stamps, push/pop totals and frame
+    boundaries, single- and multi-frame."""
+    design, _, _ = designs[name]
+    ref = simulate(design, engine="scalar", frames=frames)
+    depths = dict(design.fifo.depth)
+    for jit in (True, False):
+        got = VectorSim(design.modules, design.edges, depths,
+                        frames=frames).run(jit=jit)
+        assert got.cycles == ref.cycles
+        assert got.sink_tokens == ref.sink_tokens
+        assert got.frame_ends == ref.frame_ends
+        assert got.deadlock is None
+        assert _edge_sig(got) == _edge_sig(ref)
+
+
+def test_vector_engine_is_default(designs):
+    design, _, _ = designs["convolution"]
+    res = design.simulate()
+    assert res.engine == "vector"
+    # sampling is scalar-only: auto falls back, explicit vector raises
+    assert design.simulate(sample_every=64).engine == "scalar"
+    with pytest.raises(ValueError):
+        design.simulate(sample_every=64, engine="vector")
+
+
+def test_vector_unbounded_matches_scalar(designs):
+    design, _, _ = designs["stereo"]
+    ref = simulate(design, engine="scalar", unbounded=True)
+    got = VectorSim(design.modules, design.edges, {}, unbounded=True).run()
+    assert got.cycles == ref.cycles and _edge_sig(got) == _edge_sig(ref)
+
+
+def test_vector_starvation_diagnosed():
+    """Forcing an inconsistent need table (needs exceed what the producer
+    ever makes) must stall and name the starved module/edge, like the
+    scalar engine's diagnosis."""
+    from repro.core.buffers import Edge
+    from repro.core.dtypes import UInt
+    from repro.core.rigel import Interface, RModule, ScheduleType
+
+    def mod(name, total):
+        st = ScheduleType(UInt(8), total, 1)
+        return RModule(name, "Map", Interface("Static", st),
+                       Interface("Static", st), Fraction(1), 0)
+
+    mods = [mod("src", 5), mod("snk", 10)]
+    edges = [Edge(0, 1, 8, 0, 0)]
+    for jit in (True, False):
+        vs = VectorSim(mods, edges, {(0, 1): 3})
+        vs.need_buf = np.arange(1, 11, dtype=np.int64)   # need(k) = k
+        res = vs.run(jit=jit)
+        assert res.deadlock is not None
+        assert "starved" in res.deadlock and "snk" in res.deadlock
+        assert res.sink_tokens == 5
+
+
+def test_vector_horizon_matches_scalar(designs):
+    design, _, _ = designs["flow"]
+    ref = simulate(design, engine="scalar", max_cycles=40)
+    got = simulate(design, engine="vector", max_cycles=40)
+    assert ref.deadlock == got.deadlock == "horizon exceeded (40 cycles)"
+    assert ref.cycles == got.cycles == 40
+
+
+def test_vector_horizon_on_frame_boundary_keeps_frame_end(designs):
+    """Regression: the jit stop-code priority masks a frame-boundary PAUSE
+    when the horizon lands on the very cycle-end that crossed it — the
+    boundary must still be recorded, like the scalar engine does during
+    the last executed cycle."""
+    design, _, _ = designs["convolution"]
+    full = simulate(design, engine="scalar", frames=2)
+    horizon = full.frame_ends[0] + 1     # cut exactly after frame 0 ends
+    ref = simulate(design, engine="scalar", frames=2, max_cycles=horizon)
+    got = simulate(design, engine="vector", frames=2, max_cycles=horizon)
+    assert ref.frame_ends == got.frame_ends == [full.frame_ends[0]]
+    assert ref.cycles == got.cycles
+    assert _edge_sig(ref) == _edge_sig(got)
+
+
+# ---- multi-frame steady state ----
+
+
+@pytest.mark.parametrize("name", PAPER_APPS)
+def test_multiframe_steady_state_marks(designs, name):
+    """N back-to-back frames: the sink absorbs N frames, frame boundaries
+    are strictly increasing, every steady-state high-water mark is >= its
+    single-frame mark, and each mark's (cycle, frame) stamps are mutually
+    consistent — the cycle stamp falls inside its frame stamp's window."""
+    design, _, _ = designs[name]
+    one = design.simulate(frames=1)
+    multi = design.simulate(frames=3)
+    assert multi.sink_tokens == 3 * design.out_tokens_per_frame
+    assert multi.frame_ends == sorted(set(multi.frame_ends))
+    assert len(multi.frame_ends) == 3
+    h1, h3 = one.hwm_by_key(), multi.hwm_by_key()
+    assert all(h3[k] >= h1[k] for k in h1)
+    fe = np.asarray(multi.frame_ends)
+    for e in multi.occupancy.per_edge:
+        # monotonic stamps: the frame index recorded with the mark is
+        # exactly the number of frame boundaries before its cycle stamp
+        assert e.hwm_frame == int(np.searchsorted(fe, e.hwm_cycle,
+                                                  side="left"))
+        assert 0 <= e.hwm_frame < 3
+
+
+def test_multiframe_residue_exceeds_single_frame(designs):
+    """CONVOLUTION's crop leaves dropped-border residue resident at frame
+    end; the next frame's early consumption drains it while new tokens
+    arrive, so the steady-state mark on the crop's drain FIFO exceeds the
+    single-frame mark — the effect single-frame simulation cannot see."""
+    design, _, _ = designs["convolution"]
+    one = design.simulate(frames=1, unbounded=True)
+    multi = design.simulate(frames=3, unbounded=True)
+    h1, h3 = one.hwm_by_key(), multi.hwm_by_key()
+    grew = [k for k in h1 if h3[k] > h1[k]]
+    assert grew, "steady state must exceed single-frame somewhere"
+    # and the grown mark was first reached after frame 0 completed
+    by_key = {e.key: e for e in multi.occupancy.per_edge}
+    assert any(by_key[k].hwm_frame >= 1 for k in grew)
+
+
+def test_allocator_steady_state_depths(designs):
+    """allocate_fifos(frames=N) sizes against the steady state: depths are
+    still <= analytic, the run re-verifies, and the residue FIFO keeps
+    more slots than the single-frame allocation would grant it."""
+    design, _, _ = designs["convolution"]
+    a1 = allocate_fifos(design, frames=1)
+    a3 = allocate_fifos(design, frames=3)
+    assert a3.proven and a3.frames == 3
+    assert all(a3.depths[k] <= a3.analytic[k] for k in a3.depths)
+    assert any(a3.depths[k] > a1.depths[k] for k in a1.depths)
+
+
+# ---- fifo_solver="sim" (the compiler wiring) ----
+
+
+def test_fifo_solver_sim_installs_proven_depths(designs):
+    design, _, _ = designs["convolution"]
+    uf, T, _ = SIM_CASES["convolution"](**SIZES["convolution"])
+    sim_design = compile_pipeline(uf, T=T, fifo_solver="sim", sim_frames=2)
+    assert sim_design.fifo.solver == "sim"
+    assert sim_design.fifo_analytic == design.fifo.depth
+    assert sim_design.fifo.total_bits <= design.fifo.total_bits
+    for k, d in sim_design.fifo.depth.items():
+        assert d <= design.fifo.depth[k]
+    # schedule untouched: frame time identical to the analytic design
+    assert sim_design.cycles_per_frame() == design.cycles_per_frame()
+    assert sim_design.fifo.start == design.fifo.start
+    # the proven depths complete a steady-state run at the same cycle
+    # count as the analytic depths
+    ref = design.simulate(frames=2)
+    got = sim_design.simulate(frames=2)
+    assert got.completed and got.cycles == ref.cycles
+    rep = sim_design.report()
+    assert "solver=sim" in rep
+    assert "fifo solve: analytic" in rep and "proven by re-simulation" in rep
+
+
+def test_fifo_solver_sim_area_never_exceeds_analytic(designs):
+    for name in ("stereo", "descriptor"):
+        design, _, _ = designs[name]
+        uf, T, _ = SIM_CASES[name](**SIZES[name])
+        sim_design = compile_pipeline(uf, T=T, fifo_solver="sim")
+        assert area_units(fifo_area(sim_design.fifo.depth,
+                                    sim_design.edges)) <= \
+            area_units(fifo_area(design.fifo.depth, design.edges))
+
+
+# ---- needs() cache sentinel (regression) ----
+
+
+def test_needs_cache_none_sentinel():
+    """_SimMod.needs cached with sentinel ``_need_k = 0``, which only
+    worked because launches start at k=1: a later needs(0) call would get
+    the stale pre-warm empty list. The sentinel is now None — needs(0)
+    must compute real values."""
+    m = _SimMod(0, "m", "Map", Fraction(1), 0, 10, False)
+    e = _SimEdge(0, (1, 0), cap=4, token_bits=8)
+    m.in_edges.append((e, _need_proportional(10, 10)))
+    m.consumed.append(0)
+    assert m.needs(0) == [0]          # not the stale []
+    assert m.needs(1) == [1]
+    assert m.needs(0) == [0]          # flips back, no stale direction bias
+    assert m.needs(1) == [1]
 
 
 # ---- detection machinery on hand-built graphs ----
