@@ -83,7 +83,13 @@ def bench_hwsim() -> Dict[str, dict]:
         steady = allocate_fifos(design, frames=STEADY_FRAMES)
         uf2, T2, _ = SIM_CASES[name]()
         hand_design = compile_pipeline(uf2, T=T2, manual_fifo_overrides=hand)
-        row = compare(name, design, alloc, hand_design)
+        # proven-width narrowing: re-price the simulated allocation with the
+        # value-range pass's proven carrier widths (repro.analysis)
+        from repro.analysis import narrowed_token_bits
+        from repro.analysis.ranges import analyze
+        narrowed = narrowed_token_bits(design, analyze(design.out_val))
+        row = compare(name, design, alloc, hand_design,
+                      narrowed_token_bits=narrowed)
         d = row.as_dict()
         d.update({
             "engines_equal": timing["engines_equal"],
@@ -219,7 +225,8 @@ def report_text() -> str:
             f"shrunk={d['edges_shrunk']} fifo_bits "
             f"{d['fifo_bits_analytic']}->{d['fifo_bits_simulated']} "
             f"(steady x{d['steady_frames']}: {d['fifo_bits_steady']}, "
-            f"hand {d['fifo_bits_hand']}) "
+            f"hand {d['fifo_bits_hand']}, "
+            f"narrowed {d.get('fifo_bits_narrowed', '-')}) "
             f"engines_equal={d['engines_equal']} "
             f"vector {d['sim_speedup_vector_vs_scalar']}x")
     return "\n".join(lines)

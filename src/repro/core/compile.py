@@ -50,6 +50,7 @@ class HWDesign:
     _lowered: Dict[str, Any] = field(default_factory=dict, repr=False)
     _serve_stats: List[Any] = field(default_factory=list, repr=False)
     _hwsim: List[Any] = field(default_factory=list, repr=False)
+    _verify: List[Any] = field(default_factory=list, repr=False)
 
     # ---- reports ----
     @property
@@ -137,6 +138,20 @@ class HWDesign:
                                frames=frames, engine=engine)
         self._hwsim[:] = [alloc]
         return alloc
+
+    def verify(self, sim: bool = True, engine: str = "auto",
+               backend: str = "jax"):
+        """Static verification (repro/analysis): value-range analysis with
+        wrap-freedom proofs / witnesses over the HWImg DAG, the rewrite
+        fixpoint re-run under the IR structural-invariant checker, and the
+        netlist handshake/deadlock lint with its three-way differential
+        oracle ``static_lower <= simulated hwm <= analytic capacity``
+        (``sim=False`` skips the two hwsim runs the oracle needs).
+        Returns a VerifyResult; the latest result feeds ``report()``."""
+        from ..analysis import verify_design  # lazy, like serve/lower
+        res = verify_design(self, sim=sim, engine=engine, backend=backend)
+        self._verify[:] = [res]
+        return res
 
     def lower(self, backend: Optional[str] = None, debug: bool = False):
         """The lowering-compiler executable for this design (cached per
@@ -260,6 +275,9 @@ class HWDesign:
         for hs in self._hwsim:
             lines.append(" -- hwsim --")
             lines.extend(f"  {ln}" for ln in hs.report_lines())
+        for vr in self._verify:
+            lines.append(" -- verify --")
+            lines.extend(f"  {ln}" for ln in vr.report_lines())
         return "\n".join(lines)
 
 

@@ -26,10 +26,35 @@ class DType:
         return np.int64
 
 
+# The executor carries every integer scalar in int64.  Above 62 bits the
+# carrier itself misbehaves *silently*: a 63-bit add can overflow int64
+# mid-expression, and Int(63)'s sign extension in mask_to_width computes
+# ``x - (1 << 63)`` which is not an int64 value at all.  62 bits leaves one
+# growth bit plus the sign bit, and is the same cap the lowering rules'
+# exactness guards (patterns._fits) already assume — wider types fail here,
+# at construction, with a clear error instead of wrong numerics downstream.
+MAX_CARRIER_BITS = 62
+
+
+def _check_carrier_width(kind: str, nbits) -> None:
+    if not isinstance(nbits, int) or nbits < 1:
+        raise ValueError(f"{kind} width must be a positive int, "
+                         f"got {nbits!r}")
+    if nbits > MAX_CARRIER_BITS:
+        raise ValueError(
+            f"{kind}({nbits}) exceeds the int64 executor carrier's safe "
+            f"width ({MAX_CARRIER_BITS} bits): arithmetic and sign "
+            f"extension would wrap in the carrier, not in the modeled "
+            f"hardware")
+
+
 @dataclass(frozen=True)
 class UInt(DType):
     nbits: int
     exp: int = 0
+
+    def __post_init__(self):
+        _check_carrier_width("Uint", self.nbits)
 
     def bits(self) -> int:
         return self.nbits
@@ -46,6 +71,9 @@ class Int(DType):
     nbits: int
     exp: int = 0
 
+    def __post_init__(self):
+        _check_carrier_width("Int", self.nbits)
+
     def bits(self) -> int:
         return self.nbits
 
@@ -59,6 +87,9 @@ class Int(DType):
 @dataclass(frozen=True)
 class Bits(DType):
     nbits: int
+
+    def __post_init__(self):
+        _check_carrier_width("Bits", self.nbits)
 
     def bits(self) -> int:
         return self.nbits

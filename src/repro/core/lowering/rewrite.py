@@ -20,6 +20,7 @@ alive for any other consumer.  The concrete rules live in patterns.py.
 """
 from __future__ import annotations
 
+from collections import deque
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Tuple, Union
 
@@ -243,11 +244,39 @@ def match(rule: RewriteRule, n: IRNode, ir: LoweringIR) -> Optional[Match]:
 # --------------------------------------------------------------------------
 # driver: apply rules to fixpoint, in priority order
 
+# fixpoint-divergence cap: at least this many rule applications are always
+# allowed; large graphs get proportionally more (every sound rule strictly
+# shrinks or dispatches the graph, so legitimate runs stay far below it)
+MIN_REWRITE_CAP = 128
+_RECENT_RULES = 12
+
+
+def _rewrite_cap(ir: LoweringIR) -> int:
+    return max(MIN_REWRITE_CAP, 16 * len(ir.nodes))
+
+
 def apply_rules(ir: LoweringIR, rules: List[RewriteRule], backend: str
                 ) -> Tuple[Dict[int, Dispatch], List[str], int]:
     """Rewrite ``ir`` to fixpoint.  Returns (fusions, notes, n_rewrites):
     ``fusions`` maps pattern-root uid -> Dispatch; ``n_rewrites`` counts the
-    algebraic (Replace/Rewire) rewrites."""
+    algebraic (Replace/Rewire) rewrites.
+
+    Two guards harden the fixpoint loop (repro.analysis):
+
+      * after every mutation the IR's structural invariants are checked
+        (analysis/verify_ir.py; disable with REPRO_VERIFY_IR=0) so a buggy
+        rule raises ``InvariantViolation`` naming itself, and
+      * a divergence cap aborts a ping-ponging rule pair with a RuntimeError
+        naming the recently applied rules instead of looping forever.
+    """
+    # lazy import: repro.analysis imports core, so a module-level import
+    # here would be a cycle
+    from ...analysis.verify_ir import (InvariantViolation, check_ir,
+                                       verify_enabled)
+    verify = verify_enabled()
+    cap = _rewrite_cap(ir)
+    applied = 0
+    recent: deque = deque(maxlen=_RECENT_RULES)
     notes: List[str] = []
     n_rewrites = 0
     changed = True
@@ -275,6 +304,21 @@ def apply_rules(ir: LoweringIR, rules: List[RewriteRule], backend: str
                     n_rewrites += 1
                 else:
                     raise TypeError(f"rule {rule.name} returned {r!r}")
+                applied += 1
+                recent.append(rule.name)
+                if verify:
+                    violations = check_ir(ir)
+                    if violations:
+                        raise InvariantViolation(
+                            f"rule {rule.name!r}", violations)
+                if applied > cap:
+                    culprits = ", ".join(sorted(set(recent)))
+                    raise RuntimeError(
+                        f"rewrite fixpoint did not converge after "
+                        f"{applied} rule applications (cap {cap} for "
+                        f"{len(ir.nodes)} nodes); recently applied rules: "
+                        f"[{culprits}] — a rule pair is likely "
+                        f"ping-ponging")
                 notes.append(r.note)
                 changed = True
                 break

@@ -19,7 +19,7 @@ CLBs so allocations that trade BRAMs for shift registers stay comparable.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, List, Mapping, Sequence, Tuple
+from typing import Dict, List, Mapping, Optional, Sequence, Tuple
 
 from ..core.buffers import Edge
 from ..core.rigel import Resources, fifo_resources
@@ -37,9 +37,15 @@ def area_units(r: Resources) -> int:
 
 
 def fifo_area(depths: Mapping[EdgeKey, int],
-              edges: Sequence[Edge]) -> Resources:
-    """Total FIFO resources for a per-edge depth allocation."""
+              edges: Sequence[Edge],
+              token_bits: Optional[Mapping[EdgeKey, int]] = None
+              ) -> Resources:
+    """Total FIFO resources for a per-edge depth allocation.  ``token_bits``
+    overrides the edges' declared widths (e.g. proven-width narrowing from
+    repro.analysis.narrowed_token_bits)."""
     bits = {(e.src, e.dst): e.token_bits for e in edges}
+    if token_bits is not None:
+        bits.update(token_bits)
     total = Resources()
     for key, d in depths.items():
         total = total + fifo_resources(d, bits[key])
@@ -66,6 +72,11 @@ class AreaRow:
     deadlocks: int
     edges_shrunk: int
     throughput_unchanged: bool
+    # proven-width narrowing (repro.analysis value-range pass): the
+    # simulated allocation re-priced with every FIFO at its proven carrier
+    # width instead of the declared one (None = analysis not run)
+    narrowed: Optional[Resources] = None
+    narrowed_bits: Optional[int] = None
 
     def ratios(self) -> Dict[str, float]:
         mod = area_units(self.modules)
@@ -80,7 +91,15 @@ class AreaRow:
 
     def as_dict(self) -> Dict[str, object]:
         r = self.ratios()
+        narrowed = {}
+        if self.narrowed_bits is not None and self.narrowed is not None:
+            narrowed = {
+                "fifo_bits_narrowed": self.narrowed_bits,
+                "fifo_clbs_narrowed": self.narrowed.clbs,
+                "fifo_brams_narrowed": self.narrowed.brams,
+            }
         return {
+            **narrowed,
             "cycles": self.cycles,
             "tokens_per_cycle": round(self.throughput, 4),
             "deadlocks": self.deadlocks,
@@ -105,14 +124,25 @@ class AreaRow:
         }
 
 
-def compare(name: str, design, alloc, hand_design) -> AreaRow:
+def compare(name: str, design, alloc, hand_design,
+            narrowed_token_bits: Optional[Mapping[EdgeKey, int]] = None
+            ) -> AreaRow:
     """Build the three-column row for one app from its auto design, its
-    simulation-guided allocation and its hand-annotated compile."""
+    simulation-guided allocation and its hand-annotated compile.  When
+    ``narrowed_token_bits`` (repro.analysis proven-width narrowing) is
+    given, a fourth column re-prices the simulated allocation with every
+    FIFO at its proven carrier width."""
     bits = {(e.src, e.dst): e.token_bits for e in design.edges}
     hand_bits = {(e.src, e.dst): e.token_bits for e in hand_design.edges}
     mod_area = Resources()
     for m in design.modules:
         mod_area = mod_area + m.resources
+    narrowed = narrowed_bits = None
+    if narrowed_token_bits is not None:
+        nbits = dict(bits)
+        nbits.update(narrowed_token_bits)
+        narrowed = fifo_area(alloc.depths, design.edges, narrowed_token_bits)
+        narrowed_bits = sum(d * nbits[k] for k, d in alloc.depths.items())
     return AreaRow(
         name=name,
         modules=mod_area,
@@ -129,18 +159,28 @@ def compare(name: str, design, alloc, hand_design) -> AreaRow:
                         and alloc.verified.completed) else 1,
         edges_shrunk=alloc.shrunk_edges,
         throughput_unchanged=alloc.proven,
+        narrowed=narrowed,
+        narrowed_bits=narrowed_bits,
     )
 
 
 def table_lines(rows: Sequence[AreaRow]) -> List[str]:
-    lines = [f"{'app':14s} {'analytic':>16s} {'simulated':>16s} "
-             f"{'hand':>16s} {'auto/hand':>9s} {'sim/hand':>8s}"]
+    with_narrowed = any(r.narrowed is not None for r in rows)
+    head = (f"{'app':14s} {'analytic':>16s} {'simulated':>16s} "
+            f"{'hand':>16s} {'auto/hand':>9s} {'sim/hand':>8s}")
+    if with_narrowed:
+        head += f" {'narrowed':>16s}"
+    lines = [head]
     for r in rows:
         def cell(res: Resources) -> str:
             return f"{res.clbs}clb+{res.brams}bram"
 
         rr = r.ratios()
-        lines.append(f"{r.name:14s} {cell(r.analytic):>16s} "
-                     f"{cell(r.simulated):>16s} {cell(r.hand):>16s} "
-                     f"{rr['auto_vs_hand']:>9.3f} {rr['sim_vs_hand']:>8.3f}")
+        line = (f"{r.name:14s} {cell(r.analytic):>16s} "
+                f"{cell(r.simulated):>16s} {cell(r.hand):>16s} "
+                f"{rr['auto_vs_hand']:>9.3f} {rr['sim_vs_hand']:>8.3f}")
+        if with_narrowed:
+            line += (f" {cell(r.narrowed):>16s}" if r.narrowed is not None
+                     else f" {'-':>16s}")
+        lines.append(line)
     return lines

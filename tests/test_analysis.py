@@ -1,0 +1,333 @@
+"""Static verification layer tests (repro/analysis).
+
+Covers the three passes and their failure modes: value-range soundness
+against the reference executor (deterministic + property-based), wrap
+witnesses, the carrier-width guard (62/63/64 boundary and the overflowing
+widen), adversarial rewrite rules caught by the per-mutation IR invariant
+checker (type-changing Replace, cycle-introducing Rewire, dangling
+consumers, ping-ponging fixpoints), handshake certification verdicts, the
+under-depth FIFO mutation, the three-way differential oracle
+``static_lower <= simulated hwm <= analytic capacity`` under both fifo
+solvers, and proven-width FIFO narrowing on the descriptor app.
+"""
+import numpy as np
+import pytest
+
+from repro.analysis import (InvariantViolation, analyze, certify, check_ir,
+                            check_rewrites, cross_check, narrowed_token_bits)
+from repro.analysis.handshake import CAPACITY_SLOP_TOKENS
+from repro.apps import SIM_CASES
+from repro.core import (AddAsync, AddMSBs, Array2d, Const, Input, Map, Mul,
+                        Reduce, RemoveMSBs, Rshift, Stencil, UInt,
+                        compile_pipeline)
+from repro.core.dtypes import Bits, Int, widen
+from repro.core.executor import evaluate
+from repro.core.hwimg import Abs, AbsDiff, Add, Max, Min, Sub, toposort
+from repro.core.lowering.ir import LoweringIR
+from repro.core.lowering.rewrite import (OpPat, Replace, RewriteRule, Rewire,
+                                         apply_rules)
+
+# tier-1-sized app instances (same scale as tests/test_hwsim.py)
+SIZES = {
+    "convolution": dict(w=48, h=20),
+    "stereo": dict(w=32, h=12, nd=8),
+    "descriptor": dict(w=32, h=24, n_features=16, filter_burst=64),
+}
+
+
+def _conv_chain(acc_widen=6, w=24, h=16):
+    """The convolution skeleton (Stencil->Mul->widen->Reduce->shift)."""
+    rng = np.random.RandomState(5)
+    inp = Input(Array2d(UInt(8), w, h), "x")
+    k = rng.randint(128, 256, (8, 8)).astype(np.int64)
+    st = Stencil(-7, 0, -7, 0)(inp)
+    prod = Map(Mul)(st, Const(Array2d(UInt(8), 8, 8), k))
+    s = Reduce(AddAsync)(Map(AddMSBs(acc_widen))(prod))
+    out = Map(RemoveMSBs(8 + acc_widen))(Map(Rshift(3))(s))
+    x = rng.randint(0, 256, (h, w)).astype(np.int64)
+    return out, x
+
+
+@pytest.fixture(scope="module")
+def designs():
+    out = {}
+    for name, solvers in (("convolution", ("z3", "sim")),
+                          ("stereo", ("z3", "sim")),
+                          ("descriptor", ("z3",))):
+        for solver in solvers:
+            uf, T, _hand = SIM_CASES[name](**SIZES[name])
+            out[(name, solver)] = compile_pipeline(uf, T=T,
+                                                   fifo_solver=solver)
+    return out
+
+
+# --------------------------------------------------------------------------
+# pass 1: value ranges
+
+
+def test_range_hulls_contain_executor_values():
+    """Every node's post-mask hull contains the executor's actual values."""
+    out, x = _conv_chain()
+    report = analyze(out)
+    assert report.decided
+    for v in toposort(out):
+        nr = report.nodes[v.uid]
+        if nr.lo is None:
+            continue
+        vals = np.asarray(evaluate(v, {"x": x}))
+        assert nr.lo <= int(vals.min()), (nr.line(), vals.min())
+        assert int(vals.max()) <= nr.hi, (nr.line(), vals.max())
+
+
+def test_conv_chain_proven_wrap_free():
+    """With a properly scaled shift the accumulator proves the whole chain;
+    the witness list is empty and proven_bits reflects the true per-kernel
+    sum bound (not count-times-max)."""
+    rng = np.random.RandomState(5)
+    inp = Input(Array2d(UInt(8), 24, 16), "x")
+    k = rng.randint(128, 256, (8, 8)).astype(np.int64)
+    prod = Map(Mul)(Stencil(-7, 0, -7, 0)(inp),
+                    Const(Array2d(UInt(8), 8, 8), k))
+    s = Reduce(AddAsync)(Map(AddMSBs(6))(prod))
+    out = Map(RemoveMSBs(14))(Map(Rshift(14))(s))
+    report = analyze(out)
+    assert report.wrap_free
+    assert report.nodes[out.uid].status == "proven"
+    red = next(v for v in toposort(out) if v.op == "Reduce")
+    nr = report.nodes[red.uid]
+    assert nr.status == "proven"
+    assert nr.proven_bits is not None and nr.proven_bits <= 22
+
+
+def test_wrap_witness_on_unwidened_add():
+    """u8 + u8 -> u8 wraps; the witness carries the exact pre-mask hull."""
+    a = Input(Array2d(UInt(8), 4, 4), "a")
+    b = Input(Array2d(UInt(8), 4, 4), "b")
+    out = Map(Add)(a, b)
+    report = analyze(out)
+    nr = report.nodes[out.uid]
+    assert nr.status == "wraps"
+    assert (nr.math_lo, nr.math_hi) == (0, 510)
+    assert (nr.lo, nr.hi) == (0, 255)          # post-mask hull: full range
+    assert report.decided and not report.wrap_free
+    assert any("wraps" in ln for ln in report.report_lines())
+    # the wrapped value really stays inside the post-mask hull
+    hi = np.full((4, 4), 255, dtype=np.int64)
+    vals = np.asarray(evaluate(out, {"a": hi, "b": hi}))
+    assert vals.min() >= 0 and vals.max() <= 255
+
+
+def test_input_ranges_tighten_proofs():
+    """Caller-supplied input ranges flow through the transfer functions."""
+    a = Input(Array2d(UInt(8), 4, 4), "a")
+    b = Input(Array2d(UInt(8), 4, 4), "b")
+    out = Map(Add)(a, b)
+    report = analyze(out, input_ranges={"a": (0, 100), "b": (0, 100)})
+    nr = report.nodes[out.uid]
+    assert nr.status == "proven"
+    assert nr.math_hi == 200 and nr.proven_bits == 8
+
+
+def test_hypothesis_random_pointop_soundness():
+    """Property: on random point-op DAGs the executor never leaves the
+    analysis hulls (wraps included — the post-mask hull must still hold)."""
+    hyp = pytest.importorskip("hypothesis")
+    st_mod = pytest.importorskip("hypothesis.strategies")
+    w, h = 6, 5
+
+    @hyp.settings(max_examples=25, deadline=None)
+    @hyp.given(data=st_mod.data())
+    def run(data):
+        rng_bits = data.draw(st_mod.integers(0, 2**31 - 1))
+        rng = np.random.RandomState(rng_bits)
+        vals = [Input(Array2d(UInt(8), w, h), "x")]
+        binops = [Add, Sub, Max, Min, AbsDiff]
+        for _ in range(data.draw(st_mod.integers(1, 6))):
+            kind = data.draw(st_mod.integers(0, 6))
+            a = vals[data.draw(st_mod.integers(0, len(vals) - 1))]
+            if kind <= 4:
+                b = vals[data.draw(st_mod.integers(0, len(vals) - 1))]
+                vals.append(Map(binops[kind])(a, b))
+            elif kind == 5:
+                vals.append(Map(Abs)(a))
+            else:
+                vals.append(Map(Rshift(data.draw(
+                    st_mod.integers(1, 4))))(a))
+        out = vals[-1]
+        x = rng.randint(0, 256, (h, w)).astype(np.int64)
+        report = analyze(out)
+        assert report.decided
+        for v in toposort(out):
+            nr = report.nodes[v.uid]
+            if nr.lo is None:
+                continue
+            arr = np.asarray(evaluate(v, {"x": x}))
+            assert nr.lo <= int(arr.min()) and int(arr.max()) <= nr.hi, \
+                nr.line()
+
+    run()
+
+
+# --------------------------------------------------------------------------
+# carrier-width guard (satellite b): 62/63/64 boundary + overflowing widen
+
+
+@pytest.mark.parametrize("mk", [UInt, Int, Bits])
+def test_carrier_width_boundary(mk):
+    assert mk(62).bits() == 62                 # widest safe carrier
+    for nb in (63, 64):
+        with pytest.raises(ValueError, match="carrier"):
+            mk(nb)
+
+
+def test_overflowing_widen_rejected():
+    assert widen(UInt(60), 2) == UInt(62)
+    with pytest.raises(ValueError, match="carrier"):
+        widen(UInt(62), 1)
+    with pytest.raises(ValueError, match="carrier"):
+        widen(Int(55), 9)
+    # the same guard fires inside a pipeline: an AddMSBs that would push a
+    # u16 product chain past the carrier is rejected at construction
+    out, _ = _conv_chain(acc_widen=6)
+    with pytest.raises(ValueError, match="carrier"):
+        Map(AddMSBs(55))(Input(Array2d(UInt(8), 4, 4), "x"))
+    assert analyze(out).decided                # the sane chain still works
+
+
+# --------------------------------------------------------------------------
+# pass 2: rewrite-invariant checker
+
+
+def test_check_ir_clean_on_real_pipelines():
+    out, _ = _conv_chain()
+    assert check_ir(LoweringIR(out)) == []
+    assert check_rewrites(out, backend="jax") == []
+
+
+def test_type_changing_replace_is_caught():
+    """A Replace whose new op infers a different type violates invariant 5
+    and the driver names the offending rule."""
+    out, _ = _conv_chain()
+    bad = RewriteRule(
+        name="widen-in-place",
+        pattern=OpPat("Map", fn="Rshift"),
+        build=lambda m: Replace("Map", {"fn": AddMSBs(4)},
+                                tuple(m.anchor.inputs), "bad widen"))
+    with pytest.raises(InvariantViolation, match="widen-in-place") as ei:
+        apply_rules(LoweringIR(out), [bad], "jax")
+    assert any("type not preserved" in v for v in ei.value.violations)
+    # the check_rewrites entry point reports instead of raising
+    vs = check_rewrites(out, rules=[bad])
+    assert vs and any("type not preserved" in v for v in vs)
+
+
+def test_cycle_introducing_rewire_is_caught():
+    """Rewiring a node onto its own consumer creates a cycle; the schedule
+    check (invariant 2) flags it at the mutating rule."""
+    out, _ = _conv_chain()
+    bad = RewriteRule(
+        name="rewire-to-consumer",
+        pattern=OpPat("Map", fn="Rshift"),
+        build=lambda m: Rewire(m.anchor.consumers[0], "bad rewire"))
+    with pytest.raises(InvariantViolation, match="rewire-to-consumer") as ei:
+        apply_rules(LoweringIR(out), [bad], "jax")
+    assert any("cycle" in v for v in ei.value.violations)
+
+
+def test_dangling_consumer_detected():
+    out, _ = _conv_chain()
+    ir = LoweringIR(out)
+    ir.node(out.uid).consumers.append(999_999)
+    vs = check_ir(ir)
+    assert any("dangling consumer" in v for v in vs)
+
+
+def test_ping_pong_rules_hit_the_fixpoint_cap():
+    """A self-reapplying (type-preserving) rule diverges; the cap aborts
+    with a diagnostic naming the recently applied rules."""
+    out, _ = _conv_chain()
+    noop = RewriteRule(
+        name="self-replace",
+        pattern=OpPat("Map", fn="Rshift"),
+        build=lambda m: Replace(m.anchor.op, dict(m.anchor.params),
+                                tuple(m.anchor.inputs), "noop"))
+    with pytest.raises(RuntimeError, match="ping-ponging") as ei:
+        apply_rules(LoweringIR(out), [noop], "jax")
+    assert "self-replace" in str(ei.value)
+
+
+# --------------------------------------------------------------------------
+# pass 3: handshake lint + the three-way differential oracle
+
+
+def test_certify_verdicts(designs):
+    for (name, solver), design in designs.items():
+        report = certify(design)
+        assert not report.errors, (name, solver, report.errors)
+        expected = ("certified",) if solver == "z3" else \
+            ("certified", "sim-proven")
+        assert report.verdict in expected, (name, solver, report.verdict)
+        # every consuming edge carries the sound occupancy floor
+        assert all(e.static_lower == 1 for e in report.edges
+                   if e.need_total >= 1)
+
+
+def test_under_depth_fifo_is_caught(designs):
+    """Zeroing a FIFO the trace model needs flips the verdict to at-risk
+    with a named under-depth error (the ISSUE's depth mutation check)."""
+    for name in ("stereo", "convolution"):
+        design = designs[(name, "z3")]
+        base = certify(design)
+        cand = [e for e in base.edges
+                if e.modeled and e.model_backlog > 1 + CAPACITY_SLOP_TOKENS]
+        if cand:
+            break
+    assert cand, "no modeled edge with backlog beyond zero-depth capacity"
+    key = cand[0].key
+    mutated = certify(design, depths={key: 0})
+    assert mutated.verdict == "at-risk"
+    assert any(f"under-depth FIFO on {key}" in err
+               for err in mutated.errors), mutated.errors
+
+
+def test_three_way_bound_holds(designs):
+    """static_lower <= simulated hwm <= analytic capacity, both solvers."""
+    for (name, solver), design in designs.items():
+        res = cross_check(design)
+        assert res.completed, (name, solver)
+        assert res.ok, (name, solver, res.violations)
+        assert res.hwm, (name, solver)
+        for key, lb in res.lower.items():
+            assert res.hwm.get(key, 0) >= lb
+            if key in res.upper:
+                assert res.hwm[key] <= res.upper[key]
+
+
+# --------------------------------------------------------------------------
+# proven-width narrowing + the HWDesign.verify() surface
+
+
+def test_descriptor_narrowing_changes_fifo_bits(designs):
+    """The proven-width pass narrows at least one nonzero-depth FIFO on the
+    descriptor app (the sparse_take index provably fits log2(w*h) bits), so
+    the priced FIFO bits actually drop."""
+    design = designs[("descriptor", "z3")]
+    narrowed = narrowed_token_bits(design)
+    declared = {(e.src, e.dst): e.token_bits for e in design.edges}
+    assert all(narrowed[k] <= declared[k] for k in narrowed)
+    shrunk = [k for k, d in design.fifo.depth.items()
+              if d > 0 and narrowed[k] < declared[k]]
+    assert shrunk, "no nonzero-depth FIFO narrowed"
+    total = sum(d * narrowed[k] for k, d in design.fifo.depth.items())
+    assert total < design.fifo.total_bits
+
+
+def test_design_verify_surface(designs):
+    design = designs[("convolution", "z3")]
+    res = design.verify(sim=False)
+    assert res.ok
+    assert res.cross is None                   # sim=False skips the oracle
+    assert res.ranges.decided and not res.ir_violations
+    report = design.report()
+    assert " -- verify --" in report
+    assert "rewrite fixpoint structurally clean" in report
