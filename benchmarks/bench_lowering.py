@@ -1,11 +1,19 @@
 """Backend wall-time benchmark: numpy executor vs the lowering compiler
 (jax = jnp lowering + jnp-level fusions, pallas = + fused Pallas-kernel
-dispatch in interpret mode) for the paper's four apps plus PYRAMID.
+dispatch and megakernel emission in interpret mode) for the paper's four
+apps plus PYRAMID.
 
 Cold (first call: trace + XLA compile) and warm (steady-state) timings are
 measured separately so jit compile time does not pollute the perf
-trajectory; ``write_json`` emits both, plus per-backend fusion counts,
-into BENCH_kernels.json.
+trajectory; ``write_json`` emits both, plus per-backend fusion counts and
+a per-app ``megakernel`` sub-dict (segment/fused-node/line-buffer stats
+and the warm speedup of the fused plan over the per-op dispatch
+baseline), into BENCH_kernels.json.
+
+``--canary APP`` is the dispatch-overhead smoke gate (CI runs PYRAMID, the
+shallow pipeline where per-op dispatch overhead dominates): the fused
+pallas plan must stay bit-exact vs the numpy executor and must not run
+slower than the per-op baseline beyond a noise margin.
 """
 from __future__ import annotations
 
@@ -68,6 +76,18 @@ def bench_backends():
             row["numpy_warm_us"] / max(1, row["jax_warm_us"]), 3)
         row["speedup_pallas_vs_numpy"] = round(
             row["numpy_warm_us"] / max(1, row["pallas_warm_us"]), 3)
+        # per-segment megakernel stats + the fused-vs-per-op-dispatch
+        # speedup (the pallas timing above IS the megakernel plan; the
+        # per-op plan compiles every node separately — the dispatch
+        # overhead the megakernel exists to amortize)
+        lp = design.lower("pallas")
+        lpp = design.lower("pallas", per_node=True)
+        _, per_op_warm = _time_cold_warm(lambda: lpp(inp))
+        row["megakernel"] = dict(
+            lp.megakernel_stats(),
+            per_op_warm_us=per_op_warm,
+            speedup_vs_per_op=round(
+                per_op_warm / max(1, row["pallas_warm_us"]), 3))
         out[name] = row
     _memo = out
     return out
@@ -82,7 +102,9 @@ def write_json(path: str = "BENCH_kernels.json") -> dict:
                  "compile), warm = steady state over "
                  f"{WARM_ITERS} iters; jax = lowering compiler (jnp fusions "
                  "+ segmented whole-pipeline jit), pallas = + fused Pallas "
-                 "kernel dispatch in interpret mode"),
+                 "kernel dispatch and megakernel emission in interpret "
+                 "mode; megakernel.speedup_vs_per_op = fused plan vs "
+                 "per-node dispatch baseline"),
         "sizes": SIZES,
         "apps": bench_backends(),
     })
@@ -90,10 +112,79 @@ def write_json(path: str = "BENCH_kernels.json") -> dict:
 
 def run(csv_rows):
     for name, row in bench_backends().items():
+        mk = row["megakernel"]
         csv_rows.append((f"lowering_{name}",
                          f"{row['jax_warm_us']}",
                          f"numpy_us={row['numpy_warm_us']},"
                          f"jax_cold_us={row['jax_cold_us']},"
                          f"speedup={row['speedup_jax_vs_numpy']},"
-                         f"fusions={row['fusions']}"))
+                         f"fusions={row['fusions']},"
+                         f"mk_segments={mk['segments']},"
+                         f"mk_speedup_vs_per_op={mk['speedup_vs_per_op']}"))
     return csv_rows
+
+
+def check_canary(app: str = "pyramid", margin: float = 0.8) -> int:
+    """The megakernel-smoke CI gate.  Fails (returns 1) unless, at bench
+    size: the fused pallas plan is bit-exact (int) / finite (float) vs
+    the numpy executor, the app emits at least one megakernel, and the
+    fused plan's warm latency is no worse than ``margin`` x the per-op
+    dispatch baseline (margin < 1 absorbs shared-runner noise; the
+    steady-state expectation is a speedup > 1)."""
+    from repro.apps import BENCH_CASES
+    from repro.core import compile_pipeline
+    uf, inputs_fn = BENCH_CASES[app](**SIZES.get(app, {}))
+    design = compile_pipeline(uf)
+    inp = inputs_fn(np.random.RandomState(0))
+    ref, got = design.run(inp), design.run(inp, backend="pallas")
+    flat = lambda o: list(o) if isinstance(o, tuple) else [o]  # noqa: E731
+    for r, g in zip(flat(ref), flat(got)):
+        r, g = np.asarray(r), np.asarray(g)
+        ok = (np.allclose(r, g, rtol=1e-5, atol=0) and np.isfinite(g).all()
+              if r.dtype.kind == "f" else np.array_equal(r, g))
+        if not ok:
+            print(f"canary {app}: FAIL — pallas output diverges from the "
+                  "numpy executor")
+            return 1
+    stats = design.lower("pallas").megakernel_stats()
+    _, warm = _time_cold_warm(
+        lambda: design.run(inp, backend="pallas"))
+    lpp = design.lower("pallas", per_node=True)
+    _, per_op_warm = _time_cold_warm(lambda: lpp(inp))
+    speedup = per_op_warm / max(1, warm)
+    print(f"canary {app}: {stats['segments']} megakernel(s), "
+          f"{stats['fused_nodes']} fused node(s), "
+          f"{stats['linebuf_bytes']} line-buffer byte(s); "
+          f"warm {warm}us vs per-op {per_op_warm}us "
+          f"(speedup {speedup:.2f}x, floor {margin:.2f}x)")
+    if stats["segments"] < 1:
+        print(f"canary {app}: FAIL — no megakernel emitted")
+        return 1
+    if speedup < margin:
+        print(f"canary {app}: FAIL — fused plan slower than "
+              f"{margin:.2f}x the per-op dispatch baseline")
+        return 1
+    print(f"canary {app}: OK")
+    return 0
+
+
+def main() -> int:
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--canary", metavar="APP",
+                    help="run the megakernel dispatch-overhead gate on APP")
+    ap.add_argument("--margin", type=float, default=0.8,
+                    help="canary floor: fused warm must be >= margin x "
+                         "per-op (default 0.8)")
+    args = ap.parse_args()
+    if args.canary:
+        return check_canary(args.canary, args.margin)
+    rows = run([])
+    for name, val, info in rows:
+        print(f"{name}: {val}us  {info}")
+    return 0
+
+
+if __name__ == "__main__":
+    import sys
+    sys.exit(main())

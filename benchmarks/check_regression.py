@@ -4,9 +4,14 @@ Compares a fresh ``benchmarks/run.py`` result against the committed
 baseline (``git show HEAD:BENCH_kernels.json`` by default, so it works
 even after the fresh run has merge-updated the working-tree file) and
 fails when any app's gated metric regressed by more than ``--threshold``
-(default 25%). Two metrics are gated: the warm lowering speedup
-(``speedup_jax_vs_numpy``) and the serve throughput multiple
-(``serve.throughput_x_vs_run`` — dotted paths walk nested rows). Only
+(default 25%). Gated metrics: the warm lowering speedups
+(``speedup_jax_vs_numpy``, ``speedup_pallas_vs_numpy``), the serve
+throughput multiple (``serve.throughput_x_vs_run`` — dotted paths walk
+nested rows), and the megakernel rows (``megakernel.speedup_vs_per_op``,
+the dispatch-overhead canary as a same-machine ratio, and
+``megakernel.fused_nodes``, whose drop means segments stopped fusing;
+a 0 baseline — apps with no fused segment — gates only against going
+one-sided-missing). Only
 metrics absent from *both* sides skip (no such row exists anywhere — the
 metric simply isn't tracked for that app); a metric present on exactly
 one side is a hard failure: a baseline row with no fresh value means a
@@ -35,7 +40,14 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 METRIC = "speedup_jax_vs_numpy"
 SERVE_METRIC = "serve.throughput_x_vs_run"
-METRICS = (METRIC, SERVE_METRIC)
+# megakernel gates: the fused-vs-per-op warm speedup (the PYRAMID warm
+# latency canary in machine-normalized form — both sides of the ratio
+# are measured on the same runner, so absolute-us noise divides out),
+# the fused-node count (a drop means segments stopped fusing), and the
+# pallas-vs-numpy warm speedup (the end-to-end latency gate)
+MK_METRICS = ("speedup_pallas_vs_numpy", "megakernel.speedup_vs_per_op",
+              "megakernel.fused_nodes")
+METRICS = (METRIC, SERVE_METRIC) + MK_METRICS
 
 
 def load_baseline(spec: str) -> Dict[str, Any]:

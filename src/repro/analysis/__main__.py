@@ -21,11 +21,15 @@ from typing import List, Optional
 from . import VerifyResult, verify_design
 
 # apps the cycle simulator supports end-to-end; ``--all-apps`` walks these.
-# pyramid compiles and passes the static passes but its analytic FIFO
-# depths deadlock in hwsim (reconvergent down/upsample join — a known gap,
-# see ROADMAP.md), which also aborts the fifo_solver="sim" compile; select
-# it explicitly with ``--app pyramid --solver z3 --no-sim``.
-HWSIM_APPS = ("convolution", "descriptor", "flow", "stereo")
+HWSIM_APPS = ("convolution", "descriptor", "flow", "stereo", "pyramid")
+
+# (app, solver) pairs verified static-only: pyramid's *analytic* depths
+# deadlock in hwsim (reconvergent down/upsample join — the per-edge slack
+# model never sees the whole-resampling-phase skew on the fanout edge), so
+# the simulation oracle has nothing sound to replay at those depths.  The
+# fifo_solver="sim" install repairs the allocation by upward search
+# (hwsim/allocate.py) and IS simulation-verified below.
+STATIC_ONLY = {("pyramid", "z3")}
 
 
 def _run_one(name: str, solver: str, engine: str, sim: bool
@@ -67,9 +71,14 @@ def main(argv: Optional[List[str]] = None) -> int:
     failures: List[str] = []
     for name in names:
         for solver in solvers:
+            static_only = (name, solver) in STATIC_ONLY
+            if static_only:
+                print(f"verify {name}[{solver}]: static passes only "
+                      "(analytic depths deadlock in hwsim; the sim solver "
+                      "repairs and verifies them)")
             try:
                 res = _run_one(name, solver, args.engine,
-                               sim=not args.no_sim)
+                               sim=not args.no_sim and not static_only)
             except Exception as exc:           # compile/verify blew up
                 print(f"verify {name}[{solver}]: ERROR: {exc}")
                 failures.append(f"{name}[{solver}]")

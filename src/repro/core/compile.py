@@ -153,18 +153,24 @@ class HWDesign:
         self._verify[:] = [res]
         return res
 
-    def lower(self, backend: Optional[str] = None, debug: bool = False):
+    def lower(self, backend: Optional[str] = None, debug: bool = False,
+              megakernel: str = "auto", per_node: bool = False):
         """The lowering-compiler executable for this design (cached per
-        backend): explicit IR -> rewrite rules -> whole-pipeline jit
-        (core/lowering/).  ``debug=True`` keeps the eager per-node path
-        for node-level diffing.  ``notes``/``lowering_report()`` carry the
-        fused-dispatch notes and jit cache stats."""
+        backend): explicit IR -> rewrite rules -> per-segment programs
+        (core/lowering/; on the pallas backend eligible segments emit
+        fused row-streaming megakernels).  ``debug=True`` keeps the eager
+        per-node path for node-level diffing; ``megakernel="off"``
+        disables megakernel emission; ``per_node=True`` compiles every
+        node as its own program (the bench's per-op dispatch baseline).
+        ``notes``/``lowering_report()`` carry the fused-dispatch and
+        megakernel notes plus jit cache stats."""
         b = backend or self.backend
-        key = (b, debug)
+        key = (b, debug, megakernel, per_node)
         if key not in self._lowered:
             # lazy import: numpy-only flows stay jax-free
             from .lowering import lower_pipeline
-            lp = lower_pipeline(self.out_val, backend=b, debug=debug)
+            lp = lower_pipeline(self.out_val, backend=b, debug=debug,
+                                megakernel=megakernel, per_node=per_node)
             self._lowered[key] = lp
             self.notes.extend(lp.notes)
         return self._lowered[key]
@@ -231,12 +237,16 @@ class HWDesign:
         return srv
 
     def lowering_report(self) -> str:
-        """Fused-dispatch notes and per-signature jit cache stats for every
-        instantiated lowering backend (empty until ``lower()``/``run`` with
-        a jax/pallas backend has been called)."""
+        """Fused-dispatch notes, per-segment megakernel lines (name,
+        fused-node count, VMEM line-buffer bytes) and per-signature jit
+        cache stats for every instantiated lowering backend (empty until
+        ``lower()``/``run`` with a jax/pallas backend has been called)."""
         lines: List[str] = []
-        for (b, debug), lp in sorted(self._lowered.items()):
-            tag = f"{b}+debug" if debug else b
+        for (b, debug, megakernel, per_node), lp in sorted(
+                self._lowered.items()):
+            tag = b + ("+debug" if debug else "") \
+                + ("+mk_off" if megakernel == "off" else "") \
+                + ("+per_node" if per_node else "")
             lines.append(f" -- lowering backend={tag} --")
             lines.extend(f"  {ln}" for ln in lp.report_lines())
         return "\n".join(lines)
@@ -448,9 +458,12 @@ def compile_pipeline(uf: UserFunction, T: Fraction = Fraction(1),
         design.fifo_analytic = dict(alloc.analytic)
         design.fifo_sim_proven = alloc.proven
         design.fifo = fifo.with_depths(alloc.depths, edges, solver="sim")
+        grown = (f", {alloc.grown_edges} grown past a deadlocked analytic "
+                 "depth (reconvergent-join repair)" if alloc.grown_edges
+                 else "")
         design.notes.append(
             f"fifo_solver=sim: {alloc.shrunk_edges}/{len(alloc.depths)} "
-            f"FIFOs shrunk over {sim_frames} simulated frame(s), "
+            f"FIFOs shrunk over {sim_frames} simulated frame(s){grown}, "
             f"{fifo.total_bits} -> {design.fifo.total_bits} bits "
             f"({'proven' if alloc.proven else 'NOT PROVEN — reverted'})")
     return design

@@ -1,32 +1,57 @@
 """Pass 3 of the lowering compiler: the jit-compiled execution engine.
 
-The scheduled, rewritten IR is compiled into jit programs instead of eager
-per-node dispatch: the schedule is partitioned into maximal segments, each
-traced into one XLA computation, so an integer pipeline becomes a single
-whole-pipeline program.
+The scheduled, rewritten IR is compiled into a small number of programs
+instead of eager per-node dispatch.  The schedule is partitioned into
+segments; each segment becomes either
 
-Why segments rather than always one program: XLA:CPU unconditionally
-allows FMA contraction (`AllowFPOpFusion::Fast`) when an f32 multiply and
-a dependent add/subtract land in the same fused loop, and neither XLA
-flags nor optimization barriers survive to codegen.  A contracted
-`a*b - c*c` diverges from the IEEE-exact numpy executor (FLOW's 2x2 solve
-turns a det==0 into a tiny nonzero residual).  The partitioner therefore
-closes a segment exactly where an f32 add/sub would consume a value that
-an f32 multiply earlier in the same segment produced (tracking taint
-through data-movement ops, which loop fusion makes transparent): the
-program boundary materializes the product, restoring the op-at-a-time
-IEEE semantics the reference executor defines.  Integer arithmetic is
-exact under any fusion, so integer work never splits.
+* a **megakernel** (pallas backend): one fused Pallas kernel that streams
+  the frame row-block by row-block through VMEM-resident line buffers
+  (megakernel.py), materializing no intermediate image at all — the
+  software mirror of the paper's hardware dataflow; or
+* a **generic XLA segment**: the segment's nodes traced into one XLA
+  computation via the LOWERERS table (every backend; the only path on
+  ``backend="jax"``).
+
+Why segments split at all — the FMA story, now a *per-segment* decision:
+XLA:CPU unconditionally allows FMA contraction (``AllowFPOpFusion::Fast``)
+when an f32 multiply and a dependent add/subtract land in the same fused
+loop, and neither XLA flags nor optimization barriers survive to codegen.
+A contracted ``a*b - c*c`` diverges from the IEEE-exact numpy executor
+(FLOW's 2x2 solve turns a det==0 into a tiny nonzero residual).  Each
+segment resolves this its own way:
+
+* Generic XLA segments close exactly where an f32 add/sub would consume a
+  value that an f32 multiply earlier in the same segment produced
+  (tracking taint through data-movement ops, which loop fusion makes
+  transparent): the program boundary materializes the product, restoring
+  op-at-a-time IEEE semantics.  Whether the active backend contracts at
+  all is probed at runtime (``backend_contracts_fma``), not assumed.
+* Megakernel segments never split: inside one Pallas kernel we control
+  the FLOP order, and the emitter computes f32 multiplies exactly in a
+  way contraction can't rewrite (megakernel._exact_f32_mul) — so fused
+  f32 pipelines compile to a single program again.
+
+This yields the two-tier verification contract: integer pipelines are
+bit-exact on every backend under any fusion; float pipelines are bit-exact
+on generic segments and within ``megakernel.FLOAT_ULP_BOUND`` ULPs of the
+executor on megakernel segments (bit-exact on CPU today; the bound is the
+documented promise for backends whose FMA behavior we don't control).
 
 Compiled programs are cached per input-shape/dtype signature (jax's jit
 cache; the engine keeps per-signature call stats for the lowering report)
-and shared by ``run``/``run_batch`` (batch mode jits the vmapped trace).
+and shared by ``run``/``run_batch``/``run_batch_device`` (batch mode jits
+the vmapped trace — megakernel programs vmap like any other jit program,
+so the serving path takes them unchanged).
 
 ``debug=True`` keeps the fully eager per-node path (``node_values``
 exposes the whole environment) for node-level diffing against executor.py.
+``per_node=True`` compiles every node as its own program — the per-op
+dispatch baseline the bench's ``megakernel.speedup_vs_per_op`` row is
+measured against.
 """
 from __future__ import annotations
 
+from collections import deque
 from typing import Any, Dict, List, Tuple
 
 import jax
@@ -38,7 +63,9 @@ from ..dtypes import ArrayT, Float, SparseT, TupleT
 from ..hwimg import Val
 from .ir import IRNode, LoweringIR
 from .lowerers import LOWERERS, jnp_mask
-from .patterns import RULES
+from .megakernel import (Megakernel, MKUnsupported, emit_megakernel,
+                         streamable, worth_emitting)
+from .patterns import MK_SUBSUMED_RULES, RULES
 from .rewrite import apply_rules
 
 
@@ -55,6 +82,16 @@ def _spec(v) -> Any:
         return (tuple(v.shape), str(v.dtype))   # metadata only: no host sync
     a = np.asarray(v)
     return (a.shape, str(a.dtype))
+
+
+def _as_input(raw):
+    """Input coercion for the jit call path.  ndarrays pass through
+    untouched — ``jax.jit``'s C++ fastpath takes numpy arrays directly,
+    and an eager ``jnp.asarray`` here costs more than the whole compute
+    of a small pipeline (the PYRAMID dispatch-overhead lesson)."""
+    if isinstance(raw, (np.ndarray, jax.Array)):
+        return raw
+    return np.asarray(raw)
 
 
 _FMA_PROBE: Dict[str, bool] = {}
@@ -139,8 +176,8 @@ def _eval_node(n: IRNode, env: Dict[int, Any]) -> Any:
 
 
 class _Task:
-    """One schedulable unit: a maximal integer segment (many nodes, one
-    program) or an isolated float node (one node, one program)."""
+    """One schedulable unit: a generic XLA segment (many nodes traced into
+    one program) or, via _MKTask, a megakernel segment."""
 
     def __init__(self, nodes: List[IRNode], in_uids: Tuple[int, ...],
                  out_uids: Tuple[int, ...]):
@@ -172,24 +209,53 @@ class _Task:
         return self._jit[key](*invals)
 
 
+class _MKTask(_Task):
+    """A megakernel segment: the whole span is one fused Pallas program
+    (jit/vmap wrap it exactly like a generic segment, so every call path —
+    frame, batch, serve — takes it unchanged)."""
+
+    def __init__(self, nodes: List[IRNode], in_uids: Tuple[int, ...],
+                 out_uids: Tuple[int, ...], mk: Megakernel):
+        super().__init__(nodes, in_uids, out_uids)
+        self.mk = mk
+
+    def _fn(self, *invals):
+        return self.mk.apply(*invals)
+
+
 class CompiledPipeline:
-    """Executable lowering of an HWImg DAG, bit-exact vs executor.py.
+    """Executable lowering of an HWImg DAG, bit-exact vs executor.py on
+    integer pipelines and generic segments, bounded-ULP on megakernel
+    float segments (megakernel.FLOAT_ULP_BOUND).
 
     Pipeline: build the IR (ir.py), rewrite it to fixpoint against the
     resident rule library (rewrite.py / patterns.py; the pallas backend
-    additionally enables the Pallas-kernel dispatch rules), partition the
-    schedule, and compile jit programs per partition.  ``notes`` is the
-    lowering report; ``fusions`` maps pattern-root uid -> Dispatch."""
+    additionally enables the Pallas-kernel dispatch rules, and megakernel
+    emission skips the rules its streaming subsumes), partition the
+    schedule, and compile one program per segment.  ``notes`` is the
+    lowering report; ``fusions`` maps pattern-root uid -> Dispatch;
+    ``megakernels`` lists the emitted segment kernels."""
 
-    def __init__(self, out: Val, backend: str = "jax", debug: bool = False):
+    def __init__(self, out: Val, backend: str = "jax", debug: bool = False,
+                 megakernel: str = "auto", per_node: bool = False):
         if backend not in ("jax", "pallas"):
             raise ValueError(f"unknown lowering backend {backend!r}")
+        if megakernel not in ("auto", "off"):
+            raise ValueError(f"unknown megakernel mode {megakernel!r}")
         self.out = out
         self.backend = backend
         self.debug = debug
+        self.per_node = per_node
+        # megakernels are a pallas-backend feature: the jax backend is the
+        # pure-XLA reference lowering and stays per-op + FMA-split
+        self.megakernel_on = (backend == "pallas" and megakernel == "auto"
+                              and not debug and not per_node)
+        self.megakernels: List[Megakernel] = []
         self.ir = LoweringIR(out)
+        rules = [r for r in RULES
+                 if not (self.megakernel_on and r.name in MK_SUBSUMED_RULES)]
         self.fusions, self.notes, self.graph_rewrites = apply_rules(
-            self.ir, RULES, backend)
+            self.ir, rules, backend)
         self._inputs = [n for n in self.ir.order if n.op == "Input"]
         self._plan = self._partition()
         self.notes.append(
@@ -197,23 +263,37 @@ class CompiledPipeline:
             f"dispatch(es), {self.graph_rewrites} graph rewrite(s); "
             + ("eager debug mode" if debug else
                f"jit engine: {len(self._plan)} program segment(s) over "
-               f"{sum(len(t.nodes) for t in self._plan)} nodes"))
+               f"{sum(len(t.nodes) for t in self._plan)} nodes"
+               + (f", {len(self.megakernels)} megakernel(s)"
+                  if self.megakernels else "")))
+        for mk in self.megakernels:
+            self.notes.append("  " + mk.report_line())
         # per-signature call counts; the first call at a signature traces
         # and XLA-compiles, later calls hit the jit cache
         self.signatures: Dict[Tuple[str, Any], int] = {}
 
     # ---- planning ----
-    def _partition(self) -> List[_Task]:
-        """Greedy maximal segments: a segment closes only when the next node
-        is an f32 add/sub consuming a value that an f32 multiply *in the
-        same segment* produced (directly or through data movement) — the one
-        adjacency a contracting backend would fuse into an FMA.  Whether the
-        active backend actually contracts is probed at runtime
-        (``backend_contracts_fma``), not assumed: on a non-contracting
-        backend every pipeline compiles to a single whole-pipeline program.
-        Integer pipelines never split either way."""
+    def _segment_io(self, nodes: List[IRNode]
+                    ) -> Tuple[Tuple[int, ...], Tuple[int, ...]]:
+        produced = {n.uid for n in nodes}
+        in_uids: List[int] = []
+        for n in nodes:
+            for u in self.ir.effective_inputs(n):
+                if u not in produced and u not in in_uids:
+                    in_uids.append(u)
+        out_uids = tuple(
+            n.uid for n in nodes
+            if n.uid == self.ir.root
+            or any(c not in produced for c in n.consumers))
+        return tuple(in_uids), out_uids
+
+    def _fma_groups(self, body: List[IRNode]) -> List[List[IRNode]]:
+        """Greedy maximal generic segments over ``body``: a segment closes
+        only when the next node is an f32 add/sub consuming a value that an
+        f32 multiply *in the same segment* produced (directly or through
+        data movement) — the one adjacency a contracting backend would fuse
+        into an FMA.  Integer pipelines never split either way."""
         split_fma = backend_contracts_fma()
-        body = [n for n in self.ir.order if n.op != "Input"]
         groups: List[List[IRNode]] = []
         cur: List[IRNode] = []
         taint: Dict[int, bool] = {}     # uid -> mul-reachable in cur
@@ -231,20 +311,97 @@ class CompiledPipeline:
                                 and any(taint.get(u, False) for u in ins)))
         if cur:
             groups.append(cur)
+        return groups
 
-        tasks = []
-        for nodes in groups:
-            produced = {n.uid for n in nodes}
-            in_uids: List[int] = []
-            for n in nodes:
-                for u in self.ir.effective_inputs(n):
-                    if u not in produced and u not in in_uids:
-                        in_uids.append(u)
-            out_uids = tuple(
-                n.uid for n in nodes
-                if n.uid == self.ir.root
-                or any(c not in produced for c in n.consumers))
-            tasks.append(_Task(nodes, tuple(in_uids), out_uids))
+    def _clustered_body(self) -> List[IRNode]:
+        """Topological order over non-Input nodes that groups streamable
+        nodes into maximal contiguous runs (Kahn's algorithm preferring to
+        stay in the current class; FIFO within a class preserves the
+        schedule's relative order)."""
+        body = [n for n in self.ir.order if n.op != "Input"]
+        in_body = {n.uid for n in body}
+        deps = {n.uid: {u for u in self.ir.effective_inputs(n)
+                        if u in in_body} for n in body}
+        ndep = {u: len(vs) for u, vs in deps.items()}
+        cons: Dict[int, List[int]] = {n.uid: [] for n in body}
+        for n in body:
+            for u in deps[n.uid]:
+                cons[u].append(n.uid)
+        ready: Dict[bool, deque] = {True: deque(), False: deque()}
+        for n in body:                  # ir.order: deterministic seeding
+            if ndep[n.uid] == 0:
+                ready[streamable(n)].append(n)
+        out: List[IRNode] = []
+        cur = True
+        while ready[True] or ready[False]:
+            if not ready[cur]:
+                cur = not cur
+            n = ready[cur].popleft()
+            out.append(n)
+            for cuid in cons[n.uid]:
+                ndep[cuid] -= 1
+                if ndep[cuid] == 0:
+                    cn = self.ir.nodes[cuid]
+                    ready[streamable(cn)].append(cn)
+        return out
+
+    def _partition(self) -> List[_Task]:
+        """Segment the schedule.  Megakernel mode carves maximal streamable
+        spans and emits one fused Pallas kernel per span (falling back to
+        the generic path per span on MKUnsupported); everything else —
+        including the whole schedule on ``backend="jax"`` — becomes maximal
+        generic XLA segments split per _fma_groups.  ``per_node=True``
+        compiles every node separately (the bench's per-op baseline)."""
+        body = [n for n in self.ir.order if n.op != "Input"]
+        if self.per_node:
+            groups: List[Tuple[bool, List[IRNode]]] = \
+                [(False, [n]) for n in body]
+        elif not self.megakernel_on:
+            groups = [(False, g) for g in self._fma_groups(body)]
+        else:
+            ordered = self._clustered_body()
+            spans: List[Tuple[bool, List[IRNode]]] = []
+            for n in ordered:
+                cls = streamable(n)
+                if spans and spans[-1][0] == cls:
+                    spans[-1][1].append(n)
+                else:
+                    spans.append((cls, [n]))
+            groups = []
+            pending: List[IRNode] = []  # spans that stay on the XLA path
+            for is_stream, nodes in spans:
+                task_nodes = None
+                if is_stream and worth_emitting(nodes):
+                    task_nodes = nodes
+                if task_nodes is None:
+                    pending.extend(nodes)
+                    continue
+                if pending:
+                    groups.extend((False, g)
+                                  for g in self._fma_groups(pending))
+                    pending = []
+                groups.append((True, task_nodes))
+            if pending:
+                groups.extend((False, g) for g in self._fma_groups(pending))
+
+        tasks: List[_Task] = []
+        for want_mk, nodes in groups:
+            in_uids, out_uids = self._segment_io(nodes)
+            if want_mk:
+                try:
+                    mk = emit_megakernel(
+                        self.ir, nodes, in_uids, out_uids,
+                        name=f"mk{len(self.megakernels)}")
+                except MKUnsupported as exc:
+                    self.notes.append(f"megakernel fallback ({exc}); "
+                                      f"generic XLA segment(s) instead")
+                    tasks.extend(self._build_tasks(
+                        self._fma_groups(nodes)))
+                    continue
+                self.megakernels.append(mk)
+                tasks.append(_MKTask(nodes, in_uids, out_uids, mk))
+            else:
+                tasks.append(_Task(nodes, in_uids, out_uids))
 
         # liveness: an input value dies at its last consuming task (and is
         # not the pipeline root) — those buffers are safe to donate on the
@@ -255,14 +412,21 @@ class CompiledPipeline:
                               if u not in live_later and u != self.ir.root)
         return tasks
 
+    def _build_tasks(self, groups: List[List[IRNode]]) -> List[_Task]:
+        out = []
+        for nodes in groups:
+            in_uids, out_uids = self._segment_io(nodes)
+            out.append(_Task(nodes, in_uids, out_uids))
+        return out
+
     # ---- execution ----
     def _load_inputs(self, inputs: Dict[str, Any], env: Dict[int, Any]):
         for n in self._inputs:
             raw = inputs[n.params["name"]]
             if isinstance(n.ty, TupleT):
-                env[n.uid] = tuple(jnp.asarray(e) for e in raw)
+                env[n.uid] = tuple(_as_input(e) for e in raw)
             else:
-                env[n.uid] = jnp.asarray(raw)
+                env[n.uid] = _as_input(raw)
 
     def _run(self, inputs: Dict[str, Any], mode: str, donate: bool = False):
         env: Dict[int, Any] = {}
@@ -347,6 +511,18 @@ class CompiledPipeline:
         return vals
 
     # ---- reporting ----
+    def megakernel_stats(self) -> Dict[str, Any]:
+        """Per-pipeline megakernel roll-up (bench rows + regression gate):
+        segment counts, fused-node total, and VMEM line-buffer bytes."""
+        return {
+            "segments": len(self.megakernels),
+            "total_segments": len(self._plan),
+            "fused_nodes": sum(m.n_nodes for m in self.megakernels),
+            "linebuf_bytes": sum(m.linebuf_bytes
+                                 for m in self.megakernels),
+            "float_nodes": sum(m.float_nodes for m in self.megakernels),
+        }
+
     def cache_stats(self) -> List[str]:
         """Per-signature jit cache stats (mode, shapes, calls)."""
         lines = []
@@ -365,6 +541,8 @@ class LoweredPipeline(CompiledPipeline):
     """Back-compat alias for the pre-refactor class name."""
 
 
-def lower_pipeline(out: Val, backend: str = "jax",
-                   debug: bool = False) -> CompiledPipeline:
-    return CompiledPipeline(out, backend=backend, debug=debug)
+def lower_pipeline(out: Val, backend: str = "jax", debug: bool = False,
+                   megakernel: str = "auto",
+                   per_node: bool = False) -> CompiledPipeline:
+    return CompiledPipeline(out, backend=backend, debug=debug,
+                            megakernel=megakernel, per_node=per_node)

@@ -1,0 +1,712 @@
+"""Megakernel emission: one fused Pallas kernel per schedule segment.
+
+The engine's generic path executes one XLA op per IR node, materializing
+every intermediate image in memory.  Hardware doesn't work that way — the
+paper's pipelines stream rows through line buffers and FIFOs — and neither
+does this emitter: for an eligible segment it generates a *single* Pallas
+kernel whose grid walks the output frame in row blocks.  Input frames are
+VMEM-resident; every interior node keeps only the rowful *window* its
+consumers demand (its line buffer), sized statically by propagating row
+demands backward through the segment's stencil/pad/crop/resampling
+geometry; the point-op/stencil/reduce chain is applied in registers block
+by block, so no intermediate image is ever written back whole.
+
+Row-demand propagation.  Each node's window is ``rows [off(r0), off+size)``
+of its virtual frame, where ``r0`` is the block's first output row and
+``off`` composes the segment's geometry: stencils shift by their window
+base and widen by the window height, pad/crop shift, down/upsampling
+scale by the stride (including floor division — resampling pyramids
+reconverge with *skewed* row phases, the same skew the FIFO solver sees).
+Window sizes must be static, so every ``off`` carries a rational slope and
+offset-interval bound (``slope*r0 + [lo, hi]``).  Reconvergent demands on
+one producer merge by taking the traced row minimum and bounding the
+union's length from the intervals — only possible when slopes agree;
+otherwise the producer falls back to whole-frame evaluation inside the
+kernel (sound: still one kernel, just not line-buffered at that node).
+Virtual rows outside a node's frame read as zero (the executor's stencil
+zero-fill), maintained by masking each window after compute.
+
+Verification contract (two tiers, see engine.py): integer segments are
+bit-exact — each node's result is wrapped by ``jnp_mask`` exactly like the
+generic path.  Float segments are promised within ``FLOAT_ULP_BOUND``
+ULPs of the reference executor; the emitter currently does better
+(bit-exact on CPU) by computing f32 multiplies in f64 and rounding once —
+the product of two f32 values is exactly representable in f64, so the
+rounded result IS the IEEE f32 multiply, and the intervening converts
+deny XLA the f32 mul→add pattern that FMA contraction rewrites.  That is
+what lets the engine drop the FMA segment split for fused f32 segments:
+inside a megakernel we control the FLOP order.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from fractions import Fraction
+from typing import Any, Callable, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ...kernels.stream import (MK_BLOCK_ROWS, interpret_default,
+                               mask_outside_frame, nbytes, row_block_spec,
+                               take_rows, whole_spec, window_rows)
+from ..dtypes import Bits, Float, Int, TupleT, UInt
+from ..hwimg import map_reshape_plans, scalar_of, type_shape
+from .ir import IRNode, LoweringIR
+from .lowerers import _JNP_FNS, LOWERERS, jnp_mask, jnp_point_fn
+
+# the float tier of the verification contract: megakernel outputs are
+# within this many ULPs of the reference executor.  Tests and the bench
+# gate enforce it; the current CPU emission is bit-exact (see module
+# docstring), the bound is headroom for backends whose FMA behavior we
+# don't control (real-TPU lane, ROADMAP).
+FLOAT_ULP_BOUND = 4
+
+
+class MKUnsupported(Exception):
+    """Segment not eligible for megakernel emission (the engine keeps the
+    generic per-op XLA path for it)."""
+
+
+# ops the emitter can stream row-block-wise.  Dispatch nodes (opaque fused
+# kernels), Filter/SparseTake (data-dependent global gather) and External
+# (host callback) stay on the generic path.
+STREAM_OPS = frozenset({
+    "Map", "Reduce", "ReducePatch", "ArgMin", "Stencil", "Pad", "Crop",
+    "Downsample", "Upsample", "Replicate", "Stack", "Concat", "FanOut",
+    "FanIn", "TupleIndex", "Const",
+})
+# arithmetic/geometry: a span of pure tuple plumbing isn't worth a kernel
+_COMPUTE_OPS = frozenset({
+    "Map", "Reduce", "ReducePatch", "ArgMin", "Stencil", "Pad", "Crop",
+    "Downsample", "Upsample",
+})
+
+# float-touching point-functions with known-safe behavior inside a fused
+# kernel: the _JNP_FNS lowerings (FloatMul rides the contraction-proof
+# f64 route, add/sub/div/sqrt can't start an FMA pattern once every
+# multiply is protected) plus int->float converts and compares.  An
+# unknown user PointFn touching float could hide an f32 mul->add
+# composition, so it stays on the generic path, where the engine's FMA
+# split protects it.
+_KNOWN_FLOAT_FNS = frozenset(_JNP_FNS) | frozenset({"ToFloat", "Gt"})
+
+
+def _is_float(s) -> bool:
+    return isinstance(s, Float)
+
+
+def _elems(ty) -> List:
+    """Image leaves of a node type (tuple fan points carry several)."""
+    return list(ty.elems) if isinstance(ty, TupleT) else [ty]
+
+
+def _has_rows(ty) -> bool:
+    return all(len(type_shape(t)) >= 2 for t in _elems(ty))
+
+
+def _carrier_dtype(ty):
+    s = scalar_of(ty)
+    if isinstance(s, (UInt, Bits, Int)):
+        return jnp.int64                # the engine's integer carrier
+    return jnp.dtype(s.np_dtype())
+
+
+def streamable(n: IRNode) -> bool:
+    """Node-level eligibility: the emitter knows the op, every tuple leg
+    is a plain image (equal heights at fan points), and any float
+    point-function has a known contraction-safe lowering."""
+    if n.dispatch is not None or n.op not in STREAM_OPS:
+        return False
+    for ty in (n.ty,) + tuple(n.input_tys):
+        if isinstance(ty, TupleT):
+            if any(isinstance(t, TupleT) for t in ty.elems):
+                return False            # nested tuples
+            hs = {type_shape(t)[0] for t in ty.elems
+                  if len(type_shape(t)) >= 2}
+            if len(hs) > 1:
+                return False            # fan of unequal heights
+    if n.op in ("Map", "Reduce", "ReducePatch"):
+        fn = n.params["fn"]
+        if fn.name not in _KNOWN_FLOAT_FNS and any(
+                _is_float(scalar_of(t))
+                for t in (n.ty,) + tuple(n.input_tys)):
+            return False    # unknown float fn: np_fn may hide a mul→add
+    if n.op == "Downsample":
+        # executor semantics stride-slice (ceil) while the typed shape
+        # floors; they agree only when the strides divide the frame — the
+        # generic path keeps the odd-size case
+        shape = type_shape(n.input_tys[0])
+        if shape[0] % n.params["sy"] or shape[1] % n.params["sx"]:
+            return False
+    return True
+
+
+def worth_emitting(nodes: List[IRNode]) -> bool:
+    """A span earns a kernel when it fuses at least two nodes and does
+    some arithmetic/geometry (not just tuple plumbing)."""
+    return len(nodes) >= 2 and any(n.op in _COMPUTE_OPS for n in nodes)
+
+
+# --------------------------------------------------------------------------
+# contraction-safe point functions (the float tier's implementation)
+
+def _exact_f32_mul(a, b):
+    # f32 x f32 is exact in f64; rounding the f64 product to f32 precision
+    # IS the IEEE f32 multiply.  The round must be reduce_precision (bit
+    # ops), not a convert: LLVM narrows fptrunc(fmul(fpext, fpext)) back
+    # to an f32 fmul and then contracts it with a neighboring fadd into an
+    # FMA — the exact drift this detour exists to prevent.  (Products in
+    # the f32 subnormal range can still double-round; the ULP tier's bound
+    # absorbs that corner.)
+    a32 = jnp.asarray(a).astype(jnp.float32)
+    b32 = jnp.asarray(b).astype(jnp.float32)
+    w = a32.astype(jnp.float64) * b32.astype(jnp.float64)
+    return jax.lax.reduce_precision(w, 8, 23).astype(jnp.float32)
+
+
+def mk_point_fn(fn) -> Callable:
+    if fn.name == "FloatMul":
+        return _exact_f32_mul
+    return jnp_point_fn(fn)
+
+
+def _fold(fn, flat):
+    acc = flat[..., 0]
+    for i in range(1, flat.shape[-1]):
+        acc = fn(acc, flat[..., i])
+    return acc
+
+
+def _mk_lower_map(v: IRNode, p, ins):
+    fn = mk_point_fn(p["fn"])
+    args = [jnp.asarray(a) if plan is None else jnp.asarray(a).reshape(plan)
+            for a, plan in zip(ins, map_reshape_plans(v.ty, v.input_tys))]
+    return fn(*args)
+
+
+def _mk_lower_reduce(v, p, ins):
+    x = ins[0]
+    return _fold(mk_point_fn(p["fn"]), x.reshape(x.shape[:-2] + (-1,)))
+
+
+def _mk_lower_reduce_patch(v, p, ins):
+    x = ins[0]
+    h_, w_, sh_, sw_ = x.shape[:4]
+    flat = x.reshape((h_, w_, sh_ * sw_) + x.shape[4:])
+    fn = mk_point_fn(p["fn"])
+    acc = flat[:, :, 0]
+    for i in range(1, sh_ * sw_):
+        acc = fn(acc, flat[:, :, i])
+    return acc
+
+
+# whole-frame fallback nodes reuse the generic table, with the
+# contraction-safe point functions swapped in
+_MK_LOWERERS = dict(LOWERERS)
+_MK_LOWERERS.update({
+    "Map": _mk_lower_map,
+    "Reduce": _mk_lower_reduce,
+    "ReducePatch": _mk_lower_reduce_patch,
+})
+
+
+# --------------------------------------------------------------------------
+# row-demand propagation
+
+@dataclass(frozen=True)
+class Demand:
+    """Window ``rows [off(r0), off+size)`` of a node's virtual frame, with
+    ``off`` bounded by ``slope*r0 + [lo, hi]`` (exact rationals; ``r0`` is
+    the block's first output row)."""
+
+    off: Callable[[Any], Any]
+    size: int
+    slope: Fraction
+    lo: Fraction
+    hi: Fraction
+
+
+WHOLE = "whole"                         # whole-frame fallback marker
+
+
+def _seed(block_rows: int) -> Demand:
+    return Demand(lambda r0: r0, block_rows, Fraction(1), Fraction(0),
+                  Fraction(0))
+
+
+def _shift(d: Demand, c: int, grow: int = 0) -> Demand:
+    if c == 0 and grow == 0:
+        return d
+    f = d.off
+    return Demand(lambda r0: f(r0) + c, d.size + grow, d.slope,
+                  d.lo + c, d.hi + c)
+
+
+def _scale(d: Demand, sy: int) -> Demand:
+    f = d.off
+    return Demand(lambda r0: f(r0) * sy, sy * (d.size - 1) + 1,
+                  d.slope * sy, d.lo * sy, d.hi * sy)
+
+
+def _floordiv(d: Demand, sy: int) -> Demand:
+    f = d.off
+    return Demand(lambda r0: f(r0) // sy, (d.size + sy - 2) // sy + 1,
+                  d.slope / sy, (d.lo - (sy - 1)) / sy, d.hi / sy)
+
+
+def _row_min(a, b):
+    # static block starts (grid == 1) keep offsets as Python ints, which
+    # downstream turns into slice/pad instead of gather/select
+    if isinstance(a, int) and isinstance(b, int):
+        return min(a, b)
+    return jnp.minimum(a, b)
+
+
+def _merge(a, b):
+    """Union of two demands on one producer.  Needs equal slopes so the
+    slope term cancels and the union's length stays statically bounded;
+    otherwise the producer falls back to whole-frame evaluation."""
+    if a is None:
+        return b
+    if WHOLE in (a, b) or a.slope != b.slope:
+        return WHOLE
+    fa, fb = a.off, b.off
+    lo = min(a.lo, b.lo)
+    size = int(math.ceil(max(a.hi + a.size, b.hi + b.size) - lo))
+    return Demand(lambda r0: _row_min(fa(r0), fb(r0)), size,
+                  a.slope, lo, min(a.hi, b.hi))
+
+
+def _map_streams_input(n: IRNode, j: int) -> bool:
+    """Does Map input j ride the row stream (leading (h, w) matches the
+    output) or broadcast whole (coefficient arrays, scalars)?"""
+    s_in = type_shape(n.input_tys[j])
+    return len(s_in) >= 2 and s_in[:2] == type_shape(n.ty)[:2]
+
+
+def _input_demands(n: IRNode, d: Demand) -> List[Any]:
+    """Per-input row demand implied by demand ``d`` on node ``n``."""
+    p = n.params
+    if n.op == "Map":
+        return [d if _map_streams_input(n, j) else WHOLE
+                for j in range(len(n.inputs))]
+    if n.op in ("Reduce", "ReducePatch", "ArgMin", "Replicate", "Stack",
+                "Concat", "FanOut", "FanIn", "TupleIndex"):
+        return [d] * len(n.inputs)
+    if n.op == "Stencil":
+        sh = abs(p["t"] - p["b"]) + 1
+        return [_shift(d, p["b"], grow=sh - 1)]
+    if n.op == "Pad":
+        return [_shift(d, -p["t"])]
+    if n.op == "Crop":
+        return [_shift(d, p["t"])]
+    if n.op == "Downsample":
+        return [_scale(d, p["sy"])]
+    if n.op == "Upsample":
+        return [_floordiv(d, p["sy"])]
+    raise MKUnsupported(f"no demand rule for {n.op}")
+
+
+# --------------------------------------------------------------------------
+# emission
+
+@dataclass
+class Megakernel:
+    """One emitted segment kernel + its report card."""
+
+    name: str
+    apply: Callable                     # (*leaf values) -> tuple of outs
+    n_nodes: int
+    n_leaves: int
+    block_rows: int
+    grid: int
+    linebuf_bytes: int                  # windowed (line-buffered) bytes
+    whole_bytes: int                    # whole-frame fallback bytes
+    float_nodes: int                    # nodes under the ULP tier
+    n_winsum: int = 0                   # box-sum chains -> reduce_window
+    note: str = ""
+
+    def report_line(self) -> str:
+        tier = (f"float tier (ULP<={FLOAT_ULP_BOUND})" if self.float_nodes
+                else "integer tier (bit-exact)")
+        extra = f" (+{self.whole_bytes}B whole)" if self.whole_bytes else ""
+        ws = (f", {self.n_winsum} box-sum chain(s) via reduce_window"
+              if self.n_winsum else "")
+        return (f"{self.name}: {self.n_nodes} fused nodes, "
+                f"grid={self.grid}x{self.block_rows}rows, "
+                f"linebuf={self.linebuf_bytes}B{extra}, {tier}{ws}")
+
+
+def _demand_pass(nodes: List[IRNode], span, out_uids,
+                 block: int) -> Dict[int, Any]:
+    """Reverse pass: row demands (window offsets + static sizes)."""
+    demand: Dict[int, Any] = {u: _seed(block) for u in out_uids}
+    for n in reversed(nodes):
+        d = demand.get(n.uid)
+        if d is None:       # pragma: no cover - every span exit is an out
+            raise MKUnsupported(f"%{n.uid} has no consumer demand")
+        if n.op == "Const" or not _has_rows(n.ty):
+            d = demand[n.uid] = WHOLE   # consts/scalars evaluate whole
+        if d is WHOLE:
+            for u in n.inputs:
+                if u in span:
+                    demand[u] = WHOLE
+            continue
+        for u, di in zip(n.inputs, _input_demands(n, d)):
+            if u in span:
+                demand[u] = _merge(demand.get(u), di)
+    return demand
+
+
+def emit_megakernel(ir: LoweringIR, nodes: List[IRNode],
+                    in_uids: Tuple[int, ...], out_uids: Tuple[int, ...],
+                    name: str = "mk",
+                    block_rows: int | None = None) -> Megakernel:
+    """Build the fused row-streaming Pallas kernel for one segment.
+
+    ``nodes`` is the segment in schedule order; ``in_uids`` are values
+    produced outside it (whole frames at call time), ``out_uids`` the
+    values it must materialize.  Raises MKUnsupported when the segment's
+    geometry defeats static window sizing (the engine then keeps the
+    generic XLA path).
+
+    ``block_rows`` picks the streaming granularity.  Default: in real
+    (TPU) mode MK_BLOCK_ROWS, so frames stream through VMEM line buffers;
+    in interpret mode the whole frame is one block — a 1-step grid makes
+    every row offset a static Python int, so window extraction lowers to
+    slices and pads XLA can fuse (the dynamic-offset gather path costs
+    ~10x warm latency under the CPU interpreter)."""
+    for n in nodes:
+        if not streamable(n):
+            raise MKUnsupported(f"%{n.uid}:{n.op} is not streamable")
+    span = {n.uid for n in nodes}
+    out_nodes = [ir.nodes[u] for u in out_uids]
+
+    heights = set()
+    for o in out_nodes:
+        for ty in _elems(o.ty):
+            shape = type_shape(ty)
+            if len(shape) < 2:
+                raise MKUnsupported(f"output %{o.uid} is not an image")
+            heights.add(shape[0])
+    if len(heights) != 1:
+        raise MKUnsupported(f"outputs disagree on height: {heights}")
+    h_out = heights.pop()
+    interpret = interpret_default()
+    if block_rows is None:
+        block_rows = h_out if interpret else MK_BLOCK_ROWS
+    block = min(block_rows, h_out)
+    grid = -(-h_out // block)
+
+    demand = _demand_pass(nodes, span, out_uids, block)
+
+    # ---- peephole: integer box-sum chains -> one window reduce ----
+    # Stencil -> (Map(AddMSBs))* -> Reduce(Add|AddAsync), single-consumer
+    # all the way, integer-carried, plain 2-D frames.  Integer addition on
+    # the int64 carrier is associative (AddMSBs only widens), so summing
+    # the patch via lax.reduce_window is bit-exact while replacing sh*sw
+    # slice taps per window with one op — the in-kernel mirror of the
+    # window_sum rewrite rule that megakernel emission subsumes (FLOW's
+    # five 8x8 second-moment sums are the poster child).
+    out_set = set(out_uids)
+    winsum: Dict[int, IRNode] = {}      # Reduce uid -> its Stencil node
+    skip: set = set()                   # chain interiors: never computed
+    for n in nodes:
+        if (n.op != "Stencil" or _is_float(scalar_of(n.ty))
+                or len(type_shape(n.input_tys[0])) != 2):
+            continue
+        chain, cur, tail = [n], n, None
+        while (len(set(cur.consumers)) == 1 and cur.uid not in out_set
+               and cur.consumers[0] in span):
+            c = ir.nodes[cur.consumers[0]]
+            if (c.op == "Map" and len(c.inputs) == 1
+                    and c.params["fn"].name == "AddMSBs"):
+                chain.append(c)
+                cur = c
+                continue
+            if (c.op == "Reduce" and not _is_float(scalar_of(c.ty))
+                    and c.params["fn"].name in ("Add", "AddAsync")):
+                tail = c
+            break
+        if tail is not None:
+            winsum[tail.uid] = n
+            skip.update(x.uid for x in chain)
+
+    # ---- byte accounting (the line-buffer report) ----
+    # Always accounted at the streaming block size: it answers "how much
+    # VMEM do the line buffers need when this kernel streams", regardless
+    # of the whole-frame block the interpreter runs with.
+    stream_block = min(MK_BLOCK_ROWS, h_out)
+    acct = (demand if block == stream_block
+            else _demand_pass(nodes, span, out_uids, stream_block))
+    linebuf = whole_b = 0
+    float_nodes = 0
+    for n in nodes:
+        if any(_is_float(scalar_of(t)) for t in _elems(n.ty)):
+            float_nodes += 1
+        if n.uid in skip:
+            continue                    # box-sum interiors never materialize
+        d = acct[n.uid]
+        for ty in _elems(n.ty):
+            shape = type_shape(ty)
+            if d is WHOLE or len(shape) < 2:
+                whole_b += nbytes(shape, _carrier_dtype(ty))
+            else:
+                linebuf += nbytes((d.size,) + tuple(shape[1:]),
+                                  _carrier_dtype(ty))
+
+    # ---- output layout: one pallas output per image leaf ----
+    out_layout = []                     # (uid, elem_idx|None, shape, dtype)
+    for o in out_nodes:
+        elems = _elems(o.ty)
+        for k, ty in enumerate(elems):
+            out_layout.append((o.uid, k if len(elems) > 1 else None,
+                               type_shape(ty), _carrier_dtype(ty)))
+
+    # Const nodes can't evaluate inside the kernel (pallas rejects captured
+    # array constants) — they become extra whole-frame operands instead
+    const_list = [(n.uid, n.params["value"], n.ty)
+                  for n in nodes if n.op == "Const"]
+    node_list = [n for n in nodes if n.op != "Const"]
+    in_list = list(in_uids)
+    leaf_is_tuple = {u: isinstance(ir.nodes[u].ty, TupleT) for u in in_list}
+
+    def apply(*leaf_vals):
+        flat, leaf_slots = [], []
+        for val in leaf_vals:
+            parts = list(val) if isinstance(val, tuple) else [val]
+            leaf_slots.append(len(parts))
+            flat.extend(jnp.asarray(x) for x in parts)
+        n_leaf = len(flat)
+        const_scalar = []               # 0-d consts ride as (1, 1) operands
+        for _uid, value, ty in const_list:
+            cv = jnp_mask(jnp.asarray(value), ty)
+            const_scalar.append(cv.ndim == 0)
+            flat.append(cv.reshape(1, 1) if cv.ndim == 0 else cv)
+
+        def kernel(*refs):
+            in_refs, out_refs = refs[:len(flat)], refs[len(flat):]
+            # static start for a 1-step grid: offsets stay Python ints
+            # and window extraction lowers to slices, not gathers
+            r0 = 0 if grid == 1 else pl.program_id(0) * block
+            whole: Dict[int, Any] = {}             # uid -> whole value
+            win: Dict[int, Tuple[Any, Any]] = {}   # uid -> (window, off)
+            it = iter(in_refs[:n_leaf])
+            for u, k in zip(in_list, leaf_slots):
+                vals = tuple(next(it)[...] for _ in range(k))
+                whole[u] = vals if leaf_is_tuple[u] or k > 1 else vals[0]
+            for (u, _v, _t), ref, was_0d in zip(const_list,
+                                                in_refs[n_leaf:],
+                                                const_scalar):
+                whole[u] = ref[0, 0] if was_0d else ref[...]
+
+            def rows(u, off, size):
+                """Rows [off, off+size) of node u's virtual frame."""
+                if u in win:
+                    v, base = win[u]
+                    if isinstance(v, tuple):
+                        return tuple(window_rows(e, off - base, size)
+                                     for e in v)
+                    return window_rows(v, off - base, size)
+                v = whole[u]
+                if isinstance(v, tuple):
+                    return tuple(take_rows(e, off, size) for e in v)
+                return take_rows(v, off, size)
+
+            for n in node_list:
+                if n.uid in skip:
+                    continue            # folded into a winsum reduce
+                d = demand[n.uid]
+                if d is WHOLE:
+                    if n.uid in winsum:
+                        stn = winsum[n.uid]
+                        raw = _winsum_whole(stn, whole[stn.inputs[0]])
+                    else:
+                        ins = [whole[u] for u in n.inputs]
+                        raw = _MK_LOWERERS[n.op](n, n.params, ins)
+                    whole[n.uid] = jnp_mask(raw, n.ty)
+                    continue
+                off = d.off(r0)
+                if n.uid in winsum:
+                    raw = _winsum_window(winsum[n.uid], off, d.size, rows)
+                else:
+                    raw = _window_node(n, d, off, rows, whole)
+                val = jnp_mask(raw, n.ty)
+                h_n = type_shape(_elems(n.ty)[0])[0]
+                if isinstance(val, tuple):
+                    val = tuple(mask_outside_frame(e, off, h_n)
+                                for e in val)
+                else:
+                    val = mask_outside_frame(val, off, h_n)
+                win[n.uid] = (val, off)
+
+            # write output rows [r0, r0 + block)
+            for ref, (uid, k, _shape, _dt) in zip(out_refs, out_layout):
+                if uid in win:
+                    v, base = win[uid]
+                    e = v[k] if k is not None else v
+                    ref[...] = window_rows(e, r0 - base, block)
+                else:                   # whole-fallback output
+                    v = whole[uid]
+                    e = v[k] if k is not None else v
+                    ref[...] = take_rows(e, r0, block)
+
+        in_specs = [whole_spec(tuple(x.shape)) for x in flat]
+        out_specs = [row_block_spec(block, s) for _, _, s, _ in out_layout]
+        out_shape = [jax.ShapeDtypeStruct(s, dt)
+                     for _, _, s, dt in out_layout]
+        outs = pl.pallas_call(
+            kernel, grid=(grid,), in_specs=in_specs, out_specs=out_specs,
+            out_shape=out_shape, interpret=interpret)(*flat)
+        outs = list(outs) if isinstance(outs, (list, tuple)) else [outs]
+
+        # regroup leaves into per-out values (tuples reassemble)
+        result, i = [], 0
+        for o in out_nodes:
+            k = len(_elems(o.ty))
+            result.append(tuple(outs[i:i + k]) if k > 1 else outs[i])
+            i += k
+        return tuple(result)
+
+    ops = [n.op for n in node_list]
+    note = (f"{name}: fused {len(node_list)} nodes "
+            f"({ops[0]}..{ops[-1]}) into one Pallas row-stream "
+            f"(grid={grid} blocks x {block} rows)")
+    return Megakernel(name, apply, len(node_list), len(in_list), block,
+                      grid, linebuf, whole_b, float_nodes, len(winsum),
+                      note)
+
+
+def _winsum_geometry(stn: IRNode):
+    p = stn.params
+    l, r, b, t = p["l"], p["r"], p["b"], p["t"]
+    return l, b, abs(t - b) + 1, abs(r - l) + 1      # (l, b, sh, sw)
+
+
+def _winsum_whole(stn: IRNode, x):
+    """Stencil->Reduce(Add) chain on a whole frame: out[i, j] sums input
+    rows i+b..i+t, cols j+l..j+r, zero outside — one reduce_window."""
+    l, b, sh, sw = _winsum_geometry(stn)
+    return jax.lax.reduce_window(
+        x, jnp.asarray(0, x.dtype), jax.lax.add, (sh, sw), (1, 1),
+        padding=((-b, sh - 1 + b), (-l, sw - 1 + l)))
+
+
+def _winsum_window(stn: IRNode, off, s: int, rows):
+    """The same chain on a row window: fetch the halo rows the patch taps
+    (zero-filled outside the frame by ``rows``) and window-reduce them."""
+    l, b, sh, sw = _winsum_geometry(stn)
+    x = rows(stn.inputs[0], off + b, s + sh - 1)
+    return jax.lax.reduce_window(
+        x, jnp.asarray(0, x.dtype), jax.lax.add, (sh, sw), (1, 1),
+        padding=((0, 0), (-l, sw - 1 + l)))
+
+
+def _window_node(n: IRNode, d: Demand, off, rows, whole):
+    """Compute node ``n``'s window rows [off, off+size) from its inputs
+    (``rows`` fetches input windows in virtual row space, ``whole`` holds
+    whole-frame values for broadcast operands)."""
+    p, s = n.params, d.size
+    if n.op == "Map":
+        plans = map_reshape_plans(n.ty, n.input_tys)
+        args = []
+        for j, (u, plan) in enumerate(zip(n.inputs, plans)):
+            if _map_streams_input(n, j):
+                x = jnp.asarray(rows(u, off, s))
+                args.append(x if plan is None
+                            else x.reshape((s,) + tuple(plan[1:])))
+            else:                       # broadcast operand, whole value
+                x = jnp.asarray(whole[u])
+                args.append(x if plan is None else x.reshape(plan))
+        return mk_point_fn(p["fn"])(*args)
+    if n.op == "Reduce":
+        return _mk_lower_reduce(n, p, [rows(n.inputs[0], off, s)])
+    if n.op == "ReducePatch":
+        return _mk_lower_reduce_patch(n, p, [rows(n.inputs[0], off, s)])
+    if n.op == "ArgMin":
+        x = rows(n.inputs[0], off, s)
+        return jnp.argmin(x.reshape(x.shape[:-2] + (-1,)),
+                          axis=-1).astype(jnp.int64)
+    if n.op == "Replicate":
+        x = rows(n.inputs[0], off, s)
+        return jnp.broadcast_to(x[..., None, None],
+                                x.shape + (p["m"], p["n"]))
+    if n.op == "Stack":
+        ins = [rows(u, off, s) for u in n.inputs]
+        return jnp.stack(ins, axis=-1)[..., None, :]
+    if n.op == "Concat":
+        return tuple(rows(u, off, s) for u in n.inputs)
+    if n.op == "FanOut":
+        x = rows(n.inputs[0], off, s)
+        return tuple(x for _ in range(p["n"]))
+    if n.op == "FanIn":
+        return rows(n.inputs[0], off, s)
+    if n.op == "TupleIndex":
+        return rows(n.inputs[0], off, s)[p["i"]]
+    if n.op == "Stencil":
+        return _window_stencil(n, p, off, s, rows)
+    if n.op == "Pad":
+        return _window_pad(n, p, off, s, rows)
+    if n.op == "Crop":
+        x = rows(n.inputs[0], off + p["t"], s)
+        return x[:, p["l"]:x.shape[1] - p["r"]]
+    if n.op == "Downsample":
+        sy, sx = p["sy"], p["sx"]
+        x = rows(n.inputs[0], off * sy, sy * (s - 1) + 1)
+        return x[::sy, ::sx]
+    if n.op == "Upsample":
+        sy, sx = p["sy"], p["sx"]
+        size_in = (s + sy - 2) // sy + 1
+        base = off // sy
+        x = rows(n.inputs[0], base, size_in)
+        if isinstance(off, int):        # static row replication
+            rel = [min((off + i) // sy - base, size_in - 1)
+                   for i in range(s)]
+            out = jnp.concatenate([x[j:j + 1] for j in rel], axis=0)
+        else:
+            rel = (jnp.asarray(off, jnp.int32)
+                   + jnp.arange(s, dtype=jnp.int32)) // sy \
+                - jnp.asarray(base, jnp.int32)
+            out = jnp.take(x, jnp.clip(rel, 0, size_in - 1), axis=0)
+        return jnp.repeat(out, sx, axis=1)
+    raise MKUnsupported(f"no window lowering for {n.op}")
+
+
+def _window_stencil(n: IRNode, p, off, s: int, rows):
+    """jnp_stencil on a row window: tap dy of output row j reads input
+    virtual row off+b+dy+j, i.e. window rows [off+b, off+b+s+sh-1) of the
+    input (zero-filled outside its frame by construction)."""
+    l, r, b, t = p["l"], p["r"], p["b"], p["t"]
+    sw, sh = abs(r - l) + 1, abs(t - b) + 1
+    x = rows(n.inputs[0], off + b, s + sh - 1)
+    w = x.shape[1]
+    pl_, pr = max(0, -min(l, 0)), max(0, max(r + sw, sw))
+    xp = jnp.pad(x, ((0, 0), (pl_, pr)) + ((0, 0),) * (x.ndim - 2))
+    out_rows = []
+    for dy in range(sh):
+        cols = []
+        for dx in range(sw):
+            ox = l + dx
+            cols.append(xp[dy:dy + s, pl_ + ox:pl_ + ox + w])
+        out_rows.append(jnp.stack(cols, axis=2))
+    return jnp.stack(out_rows, axis=2)
+
+
+def _window_pad(n: IRNode, p, off, s: int, rows):
+    """Pad on a row window: output virtual row y is input row y-t where
+    t <= y < t+h_in, else the pad value; columns pad as in _lower_pad."""
+    l, rr, t = p["l"], p["r"], p["t"]
+    h_in = type_shape(n.input_tys[0])[0]
+    x = rows(n.inputs[0], off - t, s)
+    value = p.get("value", 0)
+    if isinstance(off, int) and off >= t and off + s <= t + h_in:
+        mid = x                         # statically inside: no select
+    else:
+        idx = jnp.asarray(off, jnp.int32) + jnp.arange(s, dtype=jnp.int32)
+        inside = (idx >= t) & (idx < t + h_in)
+        mid = jnp.where(inside.reshape((s,) + (1,) * (x.ndim - 1)), x,
+                        jnp.asarray(value, x.dtype))
+    out = jnp.full((s, x.shape[1] + l + rr) + x.shape[2:], value, x.dtype)
+    return out.at[:, l:l + x.shape[1]].set(mid)

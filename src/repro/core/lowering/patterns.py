@@ -411,6 +411,15 @@ RULES: List[RewriteRule] = [
     RewriteRule("pyramid_up_up", _UP_UP, _up_up_build),
 ]
 
+# Rules whose only job is to pre-fuse Stencil->Map->Reduce chains into an
+# opaque Dispatch for speed.  The megakernel emitter streams those chains
+# natively — and a Dispatch node is opaque to it, blocking fusion of the
+# surrounding segment — so the engine skips these when megakernel emission
+# is on.  The conv2d/sad Pallas dispatches stay (their guards demand exact
+# shapes the strip kernels are tuned for), as do the pyramid algebraic
+# collapses (they shrink the graph, which helps every path).
+MK_SUBSUMED_RULES = frozenset({"separable_conv", "window_sum"})
+
 
 def register_rule(rule: RewriteRule, priority: Optional[int] = None) -> None:
     """Add a fusion pattern to the resident library (see README: the rule's

@@ -42,6 +42,8 @@ class AllocationResult:
     notes: List[str] = field(default_factory=list)
     reverted: bool = False              # verification failed; depths=analytic
     frames: int = 1                     # frames per simulated run
+    grown_edges: int = 0                # FIFOs grown past a deadlocked
+                                        # analytic depth (upward search)
 
     @property
     def proven(self) -> bool:
@@ -62,7 +64,10 @@ class AllocationResult:
 
     def report_lines(self) -> List[str]:
         lines = [f"simulated allocation: {self.shrunk_edges}/"
-                 f"{len(self.depths)} FIFOs shrunk (guard={self.guard}, "
+                 f"{len(self.depths)} FIFOs shrunk"
+                 + (f", {self.grown_edges} grown past a deadlocked "
+                    "analytic depth" if self.grown_edges else "")
+                 + f" (guard={self.guard}, "
                  f"frames={self.frames}, engine={self.baseline.engine}), "
                  f"throughput {'unchanged' if self.proven else 'CHANGED'}"]
         for k in sorted(self.depths):
@@ -85,43 +90,90 @@ def allocate_fifos(design, guard: int = 0,
     ``min(analytic, max(hwm - 1 + guard, burst_floor))``, keeps the
     analytic depth where shrinking would increase area (SRL-vs-BRAM
     inversion), then re-simulates to prove the run time is bit-identical.
-    Raises RuntimeError if the baseline simulation deadlocks (the analytic
-    allocation itself is broken — nothing to tighten)."""
+
+    When the analytic allocation itself deadlocks (the cycle-accurate
+    solver's known gap: reconvergent resampling joins — PYRAMID's
+    fanout -> downsample/upsample diamond — need the fanout edge to
+    absorb a whole resampling phase of skew the per-edge slack model
+    never sees), the allocator *searches upward* instead of aborting: an
+    unbounded run measures the true high-water marks, depths start at
+    ``max(analytic, hwm - 1 + guard)`` and any edge still implicated in a
+    deadlock is grown toward its unbounded mark until the run completes
+    at the unbounded frame time.  The grown allocation is the baseline
+    the shrink pass then tightens; ``grown_edges`` counts the repairs.
+
+    Raises RuntimeError only if even the unbounded simulation fails
+    (the netlist itself is broken — nothing to size)."""
     if design.fifo is None:
         raise RuntimeError("design has no FIFO solution to tighten")
+    bits = {(e.src, e.dst): e.token_bits for e in design.edges}
+    analytic = dict(design.fifo.depth)
+    floors: Dict[EdgeKey, int] = {}
+    for key in analytic:
+        prod = design.modules[key[0]]
+        floors[key] = (design.edges_map[key].src_burst
+                       if prod.kind in UNEXERCISED_BURSTY else 0)
+    notes: List[str] = []
+    grown = 0
+    cap = analytic
     baseline = simulate(design, max_cycles=max_cycles, frames=frames,
                         engine=engine)
     if not baseline.completed:
-        raise RuntimeError(
-            f"baseline simulation deadlocked: {baseline.deadlock}")
+        first_deadlock = baseline.deadlock
+        unbounded = simulate(design, unbounded=True, max_cycles=max_cycles,
+                             frames=frames, engine=engine)
+        if not unbounded.completed:
+            raise RuntimeError(
+                f"baseline simulation deadlocked: {baseline.deadlock}; "
+                f"unbounded run too: {unbounded.deadlock}")
+        hwm_u = unbounded.hwm_by_key()
+        trial = {k: max(d, max(hwm_u.get(k, 0) - 1, 0) + guard, floors[k])
+                 for k, d in analytic.items()}
+        while True:
+            baseline = simulate(design, fifo_depths=trial,
+                                max_cycles=max_cycles, frames=frames,
+                                engine=engine)
+            if baseline.completed and baseline.cycles <= unbounded.cycles:
+                break
+            bumped = False
+            run_hwm = baseline.hwm_by_key()
+            for k in sorted(trial):
+                if (trial[k] < hwm_u.get(k, 0)
+                        and run_hwm.get(k, 0) >= trial[k]):
+                    trial[k] += 1
+                    bumped = True
+            if not bumped:       # no at-capacity edge left to grow: jump
+                trial = {k: max(analytic[k], hwm_u.get(k, 0), floors[k])
+                         for k in analytic}
+        cap = trial
+        grown = sum(1 for k, d in trial.items() if d > analytic[k])
+        notes.append(f"  analytic allocation deadlocked ({first_deadlock}); "
+                     f"upward search grew {grown} FIFO(s) to the "
+                     "simulated marks")
     hwm = baseline.hwm_by_key()
-    bits = {(e.src, e.dst): e.token_bits for e in design.edges}
-    analytic = dict(design.fifo.depth)
     depths: Dict[EdgeKey, int] = {}
-    notes: List[str] = []
-    for key, d_ana in analytic.items():
-        prod = design.modules[key[0]]
-        floor = (design.edges_map[key].src_burst
-                 if prod.kind in UNEXERCISED_BURSTY else 0)
-        want = min(d_ana, max(max(hwm.get(key, 0) - 1, 0) + guard, floor))
-        if want < d_ana and (area_units(fifo_resources(want, bits[key]))
-                             > area_units(fifo_resources(d_ana, bits[key]))):
-            notes.append(f"  fifo {key[0]}->{key[1]}: kept analytic depth "
-                         f"{d_ana} (shrinking to {want} would leave BRAM "
+    for key, d_cap in cap.items():
+        want = min(d_cap, max(max(hwm.get(key, 0) - 1, 0) + guard,
+                              floors[key]))
+        if want < d_cap and (area_units(fifo_resources(want, bits[key]))
+                             > area_units(fifo_resources(d_cap, bits[key]))):
+            notes.append(f"  fifo {key[0]}->{key[1]}: kept depth "
+                         f"{d_cap} (shrinking to {want} would leave BRAM "
                          "for costlier SRLs)")
-            want = d_ana
+            want = d_cap
         depths[key] = want
     verified = simulate(design, fifo_depths=depths, max_cycles=max_cycles,
                         frames=frames, engine=engine)
     alloc = AllocationResult(depths, analytic, baseline, verified, guard,
-                             notes, frames=frames)
+                             notes, frames=frames, grown_edges=grown)
     if not alloc.proven:
         # cannot happen for a capacity >= observed-hwm shrink of a
         # deterministic run; if it does, the simulator itself is broken —
-        # fall back to the analytic allocation, and stay un-``proven`` so
-        # the CI gate (bench_hwsim --check) fails loudly instead of
+        # fall back to the baseline allocation (analytic, or the grown
+        # depths when the analytic ones deadlocked), and stay un-``proven``
+        # so the CI gate (bench_hwsim --check) fails loudly instead of
         # shipping a simulator regression silently
-        alloc.depths = dict(analytic)
+        alloc.depths = dict(cap)
         alloc.reverted = True
         alloc.notes.append("  VERIFICATION FAILED: shrunk allocation changed "
                            "behavior; reverted to analytic depths")

@@ -1,0 +1,109 @@
+"""Shared line-buffer / block-spec utilities for row-streaming Pallas
+kernels (the conv2d/sad strip kernels and the megakernel emitter).
+
+A streaming kernel walks the frame in row blocks: the grid iterates output
+row blocks, every input lives whole in VMEM (a full-array BlockSpec), and
+each node of the fused chain keeps only the *window* of rows its consumers
+demand — the software mirror of the hardware model's line buffers.  The
+helpers here are the window plumbing: block specs, clip-gather row
+extraction with the executor's zero-fill-outside-frame semantics, and
+byte accounting for the VMEM line-buffer report.
+"""
+from __future__ import annotations
+
+import os
+from typing import Tuple
+
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def interpret_default() -> bool:
+    """Pallas kernels run in interpret mode unless REPRO_PALLAS_REAL=1
+    (the real-TPU escape hatch shared by every resident kernel)."""
+    return os.environ.get("REPRO_PALLAS_REAL", "0") != "1"
+
+
+# rows per grid step for megakernel emission: deep enough to amortize the
+# per-block gather/compute overhead, shallow enough that stencil halos and
+# resampling-skew windows stay small multiples of it
+MK_BLOCK_ROWS = 8
+
+
+def whole_spec(shape: Tuple[int, ...]) -> pl.BlockSpec:
+    """Full-array BlockSpec: the operand is resident in VMEM for every
+    grid step (how streaming kernels see their input frames)."""
+    nd = len(shape)
+    return pl.BlockSpec(shape, lambda i, _n=nd: (0,) * _n)
+
+
+def row_block_spec(block_rows: int, shape: Tuple[int, ...]) -> pl.BlockSpec:
+    """Output BlockSpec for grid step i -> rows [i*block_rows, ...) of an
+    output of ``shape`` (trailing dims whole per block)."""
+    nd = len(shape)
+    return pl.BlockSpec((block_rows,) + tuple(shape[1:]),
+                        lambda i, _n=nd: (i,) + (0,) * (_n - 1))
+
+
+def _i32(x):
+    return jnp.asarray(x, jnp.int32)
+
+
+def _zero_rows_pad(x, top: int, bottom: int):
+    if top == 0 and bottom == 0:
+        return x
+    return jnp.pad(x, ((top, bottom),) + ((0, 0),) * (x.ndim - 1))
+
+
+def take_rows(full, off, size: int):
+    """Rows [off, off+size) of a whole-frame array in *virtual* row space:
+    rows outside [0, h) read as zero (executor zero-fill semantics — the
+    only out-of-frame demand generators are stencil halos, whose taps are
+    defined to read zero).  ``off`` may be a traced scalar; a static int
+    offset takes the slice/pad fast path (no gather, no select — XLA
+    fuses slices where it can't fuse gathers)."""
+    h = full.shape[0]
+    if isinstance(off, int):
+        lo, hi = max(0, off), min(h, off + size)
+        if lo >= hi:
+            return jnp.zeros((size,) + tuple(full.shape[1:]), full.dtype)
+        return _zero_rows_pad(full[lo:hi], lo - off, off + size - hi)
+    idx = _i32(off) + jnp.arange(size, dtype=jnp.int32)
+    win = jnp.take(full, jnp.clip(idx, 0, h - 1), axis=0)
+    valid = (idx >= 0) & (idx < h)
+    return jnp.where(valid.reshape((size,) + (1,) * (win.ndim - 1)), win,
+                     jnp.zeros((), win.dtype))
+
+
+def window_rows(win, rel_off, size: int):
+    """Rows [rel_off, rel_off+size) of an already-extracted window whose
+    coverage is guaranteed by demand propagation (no bounds masking)."""
+    if isinstance(rel_off, int):
+        return win[rel_off:rel_off + size]
+    idx = _i32(rel_off) + jnp.arange(size, dtype=jnp.int32)
+    return jnp.take(win, jnp.clip(idx, 0, win.shape[0] - 1), axis=0)
+
+
+def mask_outside_frame(win, off, h: int):
+    """Zero the rows of ``win`` (covering virtual rows [off, off+size))
+    that fall outside the node's own frame [0, h)."""
+    size = win.shape[0]
+    if isinstance(off, int):
+        if off >= 0 and off + size <= h:
+            return win
+        lo, hi = max(0, off), min(h, off + size)
+        if lo >= hi:
+            return jnp.zeros_like(win)
+        return _zero_rows_pad(win[lo - off:hi - off], lo - off,
+                              off + size - hi)
+    idx = _i32(off) + jnp.arange(size, dtype=jnp.int32)
+    valid = (idx >= 0) & (idx < h)
+    return jnp.where(valid.reshape((size,) + (1,) * (win.ndim - 1)), win,
+                     jnp.zeros((), win.dtype))
+
+
+def nbytes(shape: Tuple[int, ...], dtype) -> int:
+    n = 1
+    for d in shape:
+        n *= int(d)
+    return n * jnp.dtype(dtype).itemsize

@@ -325,6 +325,31 @@ def test_fifo_solver_sim_area_never_exceeds_analytic(designs):
             area_units(fifo_area(design.fifo.depth, design.edges))
 
 
+def test_fifo_solver_sim_repairs_pyramid_deadlock():
+    """PYRAMID's analytic depths deadlock (the fanout edge of the
+    reconvergent down/up-sample diamond must absorb a whole resampling
+    phase of skew the per-edge slack model never sees).  The sim solver's
+    upward search must grow exactly those edges, install a proven
+    allocation, and the cross-check oracle must accept the grown install
+    (upper arm = max(analytic, installed) + 1)."""
+    uf, T, _ = SIM_CASES["pyramid"]()
+    ana = compile_pipeline(uf, T=T)
+    assert not ana.simulate().completed          # the gap this repairs
+    uf2, T2, _ = SIM_CASES["pyramid"]()
+    design = compile_pipeline(uf2, T=T2, fifo_solver="sim")
+    assert design.fifo.solver == "sim" and design.fifo_sim_proven
+    grown = [k for k, d in design.fifo.depth.items()
+             if d > ana.fifo.depth[k]]
+    assert grown, "expected the reconvergent-join FIFOs to grow"
+    res = design.simulate()
+    assert res.completed
+    assert res.cycles == ana.simulate(unbounded=True).cycles
+    assert any("grown past a deadlocked analytic depth" in n
+               for n in design.notes)
+    from repro.analysis.handshake import cross_check
+    assert cross_check(design).ok
+
+
 # ---- needs() cache sentinel (regression) ----
 
 
