@@ -12,7 +12,7 @@ import time
 from fractions import Fraction
 
 from repro.apps import Convolution, Descriptor, Flow, Stereo
-from repro.core import compile_pipeline
+from repro.core import CompileOptions, compile_pipeline
 
 MANUAL = {"crop": 0, "pad": 0, "downsample": 0}
 
@@ -25,7 +25,8 @@ def run(csv_rows):
                           ("descriptor", Descriptor, Fraction(1, 4))]:
         t0 = time.time()
         auto = compile_pipeline(ctor(), T=T)
-        man = compile_pipeline(ctor(), T=T, manual_fifo_overrides=MANUAL)
+        man = compile_pipeline(
+            ctor(), T=T, options=CompileOptions(manual_fifo_overrides=MANUAL))
         dt = (time.time() - t0) * 1e6
         ra, rm = auto.resources, man.resources
         clb_ovh = (ra.clbs - rm.clbs) / max(1, rm.clbs)

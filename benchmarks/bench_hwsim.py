@@ -70,7 +70,7 @@ def bench_hwsim() -> Dict[str, dict]:
     if _memo is not None:
         return _memo
     from repro.apps import SIM_CASES
-    from repro.core import compile_pipeline
+    from repro.core import CompileOptions, compile_pipeline
     from repro.hwsim import allocate_fifos, area_units, compare, fifo_area
     out: Dict[str, dict] = {}
     for name in PAPER_APPS:
@@ -82,7 +82,8 @@ def bench_hwsim() -> Dict[str, dict]:
         alloc = allocate_fifos(design)
         steady = allocate_fifos(design, frames=STEADY_FRAMES)
         uf2, T2, _ = SIM_CASES[name]()
-        hand_design = compile_pipeline(uf2, T=T2, manual_fifo_overrides=hand)
+        hand_design = compile_pipeline(
+            uf2, T=T2, options=CompileOptions(manual_fifo_overrides=hand))
         # proven-width narrowing: re-price the simulated allocation with the
         # value-range pass's proven carrier widths (repro.analysis)
         from repro.analysis import narrowed_token_bits

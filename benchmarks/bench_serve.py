@@ -16,6 +16,18 @@ bench_lowering):
 ``write_json`` merge-updates ``apps[name]["serve"]`` into
 BENCH_kernels.json so kernel rows and serve rows coexist; the acceptance
 metric is ``throughput_x_vs_run`` (>= 2x on all four paper apps).
+
+``bench_control_plane`` measures the serving control plane on a
+mixed-signature convolution workload and writes
+``apps["control_plane"]["serve"]``:
+
+  continuous_x_vs_flush   rolling top-up vs flush-the-bucket wall clock on
+                          a workload where every signature bucket ends
+                          partial (>= 1.2x, hard-asserted, bit-exact)
+  shed_rate / p99_ms      4x overload through two QoS classes: low-pri is
+                          rate-shed with typed ``Overloaded`` errors while
+                          high-pri p99 stays within 2x of nominal (both
+                          gated by check_regression as lower-is-better)
 """
 from __future__ import annotations
 
@@ -68,8 +80,9 @@ def bench_serving():
             design.run(f, backend="jax")
         seq_jax_s = time.perf_counter() - t0
 
-        with design.serve(backend=BACKEND, max_batch=MAX_BATCH,
-                          max_delay_ms=20.0) as srv:
+        from repro.serve import ServeConfig
+        cfg = ServeConfig(max_batch=MAX_BATCH, max_delay_ms=20.0)
+        with design.serve(backend=BACKEND, config=cfg) as srv:
             srv.warmup(frames[0])                   # compile the batch path
             srv.stats.latencies.clear()
             t0 = time.perf_counter()
@@ -99,6 +112,147 @@ def bench_serving():
     return out
 
 
+# ---- control plane: continuous batching + QoS admission under overload ----
+
+CP_SIG_HEIGHTS = (40, 48, 56, 64)   # 4 signatures (shape-polymorphic conv)
+CP_FRAMES = 28                      # 7/sig: every bucket ends partial
+CP_DELAY_MS = 300.0                 # flush mode pays this stall per bucket
+CP_QOS_FRAMES = 96                  # alternating high/low priority
+# nominal pacing keeps the *admitted* overload load well under the
+# measured batched-dispatch capacity (~250fps for tiny frames), so the
+# bounded high-pri p99 measures admission policy, not raw saturation
+CP_NOMINAL_GAP_S = 1 / 32.0         # nominal arrival pacing (32 fps total)
+CP_OVERLOAD_X = 4                   # the overload multiple under test
+CP_LOW_RATE_FPS = 20.0              # low-pri token-bucket cap (nominal
+CP_LOW_BURST = 4                    # low-pri rate is 16fps: under the cap)
+CP_QOS_DELAY_MS = 10.0              # batching deadline for the QoS runs
+CP_P99_FLOOR_S = 0.025              # below this, p99 is scheduler jitter
+
+_cp_memo = None
+
+
+def _cp_frames():
+    rng = np.random.RandomState(11)
+    return [{"convolution.in": rng.randint(
+        0, 256, (CP_SIG_HEIGHTS[i % len(CP_SIG_HEIGHTS)], 96)).astype(
+            np.int64)} for i in range(CP_FRAMES)]
+
+
+def _cp_run_batching(design, frames, expected, continuous):
+    """Wall clock for one batching discipline over the partial-bucket
+    workload (everything submitted up front; warmup paid before start)."""
+    from repro.serve import FrameServer, ServeConfig
+    srv = FrameServer(ServeConfig(
+        max_batch=MAX_BATCH, max_delay_ms=CP_DELAY_MS,
+        continuous=continuous, admission=False, record_trace=False))
+    warm = [{"convolution.in": f["convolution.in"]}
+            for f in frames[:len(CP_SIG_HEIGHTS)]]
+    srv.register(design, name="convolution", backend="jax", warm_inputs=warm)
+    with srv:
+        t0 = time.perf_counter()
+        futs = srv.submit_many(frames)
+        outs = [f.result(timeout=600) for f in futs]
+        wall_s = time.perf_counter() - t0
+        stats = srv.stats
+    bit_exact = all(_eq(o, e) for o, e in zip(outs, expected))
+    return wall_s, bit_exact, stats
+
+
+def _cp_run_qos(design, frames, overload_x):
+    """Paced mixed-priority traffic through two QoS classes registered
+    over one design: "hi" (high, uncapped) and "lo" (low, token-bucket
+    capped below the overload rate).  Returns sheds + high-pri p99."""
+    from repro.serve import FrameServer, Overloaded, QoSPolicy, ServeConfig
+    srv = FrameServer(ServeConfig(
+        max_batch=MAX_BATCH, max_delay_ms=CP_QOS_DELAY_MS,
+        record_trace=False))
+    # warm every signature: a cold jit bucket mid-overload would charge an
+    # XLA compile to the p99 this run is bounding
+    from repro.serve import frame_signature
+    warm = list({frame_signature(f): f for f in frames}.values())
+    srv.register(design, name="hi", backend="jax", warm_inputs=warm,
+                 policy=QoSPolicy(priority="high"))
+    srv.register(design, name="lo", backend="jax", warm_inputs=warm,
+                 policy=QoSPolicy(priority="low", rate_fps=CP_LOW_RATE_FPS,
+                                  burst=CP_LOW_BURST))
+    gap_s = CP_NOMINAL_GAP_S / overload_x
+    sheds = 0
+    futs = []
+    with srv:
+        for i in range(CP_QOS_FRAMES):
+            app = ("hi", "lo")[i % 2]
+            f = frames[i % len(frames)]
+            try:
+                futs.append(srv.submit(f, app=app))
+            except Overloaded as e:
+                assert e.app == "lo", "only the capped class may shed"
+                sheds += 1
+            time.sleep(gap_s)
+        for f in futs:
+            f.result(timeout=600)
+        p99_hi_s = srv.health.app("hi").latency_quantiles()["p99"]
+        assert srv.admission.stats["hi"].shed == 0
+    return sheds, p99_hi_s
+
+
+def bench_control_plane():
+    global _cp_memo
+    if _cp_memo is not None:
+        return _cp_memo
+    from repro.apps import BENCH_CASES
+    from repro.core import compile_pipeline
+    from repro.core.executor import evaluate
+    uf, _ = BENCH_CASES["convolution"]()
+    design = compile_pipeline(uf)
+    frames = _cp_frames()
+    expected = [evaluate(design.out_val, f) for f in frames]
+
+    flush_s, flush_exact, _fs = _cp_run_batching(design, frames, expected,
+                                                 continuous=False)
+    cont_s, cont_exact, cs = _cp_run_batching(design, frames, expected,
+                                              continuous=True)
+    ratio = flush_s / cont_s
+    assert cont_exact and flush_exact, "batching discipline broke outputs"
+    assert cs.topup_flushes > 0, "continuous mode never topped up a batch"
+    assert ratio >= 1.2, (
+        f"continuous batching only {ratio:.2f}x vs flush-the-bucket "
+        f"(flush {flush_s * 1e3:.1f}ms, continuous {cont_s * 1e3:.1f}ms)")
+
+    # QoS runs use one signature: the bound under test is the admission
+    # policy's, and signature-split buckets would fold batching-efficiency
+    # noise into the p99
+    sheds_nom, p99_nom_s = _cp_run_qos(design, frames[:1], overload_x=1)
+    sheds_over, p99_over_s = _cp_run_qos(design, frames[:1],
+                                         overload_x=CP_OVERLOAD_X)
+    assert sheds_nom == 0, f"{sheds_nom} sheds under nominal load"
+    assert sheds_over > 0, "4x overload shed nothing (rate cap inert)"
+    # floor both p99s: sub-floor latencies are scheduler/dispatch jitter,
+    # not signal — the bound catches queue blowups, which sit far above it
+    floor_s = CP_P99_FLOOR_S
+    p99_x = max(p99_over_s, floor_s) / max(p99_nom_s, floor_s)
+    assert p99_x <= 2.0, (
+        f"high-pri p99 {p99_over_s * 1e3:.1f}ms at {CP_OVERLOAD_X}x "
+        f"overload vs {p99_nom_s * 1e3:.1f}ms nominal ({p99_x:.2f}x)")
+
+    _cp_memo = {
+        "frames": CP_FRAMES,
+        "signatures": len(CP_SIG_HEIGHTS),
+        "max_batch": MAX_BATCH,
+        "flush_wall_ms": round(flush_s * 1e3, 1),
+        "continuous_wall_ms": round(cont_s * 1e3, 1),
+        "topup_flushes": cs.topup_flushes,
+        "bit_exact_vs_numpy": bool(cont_exact and flush_exact),
+        "continuous_x_vs_flush": round(ratio, 3),
+        "overload_x": CP_OVERLOAD_X,
+        "sheds_nominal": sheds_nom,
+        "sheds_overload": sheds_over,
+        "shed_rate": round(sheds_over / CP_QOS_FRAMES, 3),
+        "p99_ms": round(max(p99_over_s, floor_s) * 1e3, 2),
+        "p99_x_overload": round(p99_x, 3),
+    }
+    return _cp_memo
+
+
 def write_json(path: str = "BENCH_kernels.json") -> dict:
     from benchmarks.json_util import merge_json
     # correctness is deterministic (unlike throughput): a non-bit-exact
@@ -111,9 +265,12 @@ def write_json(path: str = "BENCH_kernels.json") -> dict:
     return merge_json(path, {
         "serve_note": (f"{N_FRAMES} frames through HWDesign.serve() "
                        f"(max_batch={MAX_BATCH}, {BACKEND} backend, warm) vs "
-                       "sequential run(); latency is end-to-end per frame"),
-        "apps": {name: {"serve": row}
-                 for name, row in bench_serving().items()},
+                       "sequential run(); latency is end-to-end per frame; "
+                       "control_plane rows measure continuous-vs-flush "
+                       "batching and 4x-overload QoS shedding"),
+        "apps": {**{name: {"serve": row}
+                    for name, row in bench_serving().items()},
+                 "control_plane": {"serve": bench_control_plane()}},
     })
 
 
@@ -126,4 +283,11 @@ def run(csv_rows):
                          f"p50_us={row['latency_p50_us']},"
                          f"p99_us={row['latency_p99_us']},"
                          f"bit_exact={row['bit_exact_vs_numpy']}"))
+    cp = bench_control_plane()
+    csv_rows.append(("serve_control_plane",
+                     f"{cp['continuous_wall_ms']}",
+                     f"x_vs_flush={cp['continuous_x_vs_flush']},"
+                     f"shed_rate={cp['shed_rate']},"
+                     f"p99_ms={cp['p99_ms']},"
+                     f"p99_x_overload={cp['p99_x_overload']}"))
     return csv_rows

@@ -47,7 +47,18 @@ SERVE_METRIC = "serve.throughput_x_vs_run"
 # pallas-vs-numpy warm speedup (the end-to-end latency gate)
 MK_METRICS = ("speedup_pallas_vs_numpy", "megakernel.speedup_vs_per_op",
               "megakernel.fused_nodes")
-METRICS = (METRIC, SERVE_METRIC) + MK_METRICS
+# serving control plane (bench_serve.bench_control_plane, the
+# apps["control_plane"]["serve"] rows): the continuous-batching multiple
+# plus two lower-is-better guards — the 4x-overload shed fraction and the
+# floored high-priority p99
+CONTROL_PLANE_METRICS = ("serve.continuous_x_vs_flush", "serve.shed_rate",
+                         "serve.p99_ms")
+METRICS = (METRIC, SERVE_METRIC) + MK_METRICS + CONTROL_PLANE_METRICS
+
+# metrics where a RISE (not a drop) past the threshold is the regression:
+# shed fraction creeping up means admission got lossier at the same
+# overload; p99 creeping up means the high-priority latency bound eroded
+LOWER_IS_BETTER = {"serve.shed_rate", "serve.p99_ms"}
 
 
 def load_baseline(spec: str) -> Dict[str, Any]:
@@ -77,12 +88,13 @@ def find_regressions(base: Dict[str, Any], fresh: Dict[str, Any],
                      metrics: Sequence[str] = METRICS
                      ) -> Tuple[List[str], List[str]]:
     """Returns (report_rows, failed_names).  A metric regresses when its
-    fresh value drops below (1 - threshold) x baseline. Metrics missing
-    from BOTH sides are skipped silently (not tracked for that app);
-    one-sided-missing is a hard failure — a committed baseline with no
-    fresh value means a bench stopped producing the metric, and a fresh
-    value with no committed baseline means BENCH_kernels.json was not
-    refreshed alongside the change."""
+    fresh value drops below (1 - threshold) x baseline — or, for
+    LOWER_IS_BETTER metrics, rises above (1 + threshold) x baseline.
+    Metrics missing from BOTH sides are skipped silently (not tracked for
+    that app); one-sided-missing is a hard failure — a committed baseline
+    with no fresh value means a bench stopped producing the metric, and a
+    fresh value with no committed baseline means BENCH_kernels.json was
+    not refreshed alongside the change."""
     rows, bad = [], []
     base_apps = base.get("apps", {})
     fresh_apps = fresh.get("apps", {})
@@ -102,11 +114,19 @@ def find_regressions(base: Dict[str, Any], fresh: Dict[str, Any],
                             f"MISSING ({reason})")
                 bad.append(f"{app}:{metric}")
                 continue
-            floor = b * (1.0 - threshold)
-            verdict = "OK" if f >= floor else "REGRESSED"
-            rows.append(f"{app:14s} {metric}: baseline={b:.3f} "
-                        f"fresh={f:.3f} floor={floor:.3f} {verdict}")
-            if f < floor:
+            if metric in LOWER_IS_BETTER:
+                ceil = b * (1.0 + threshold)
+                ok = f <= ceil
+                rows.append(f"{app:14s} {metric}: baseline={b:.3f} "
+                            f"fresh={f:.3f} ceil={ceil:.3f} "
+                            f"{'OK' if ok else 'REGRESSED'}")
+            else:
+                floor = b * (1.0 - threshold)
+                ok = f >= floor
+                rows.append(f"{app:14s} {metric}: baseline={b:.3f} "
+                            f"fresh={f:.3f} floor={floor:.3f} "
+                            f"{'OK' if ok else 'REGRESSED'}")
+            if not ok:
                 bad.append(f"{app}:{metric}")
     return rows, bad
 

@@ -39,7 +39,7 @@ def main() -> int:
     from repro.apps import BENCH_CASES
     from repro.core import compile_pipeline
     from repro.core.executor import evaluate
-    from repro.serve import FrameServer
+    from repro.serve import FrameServer, ServeConfig
 
     designs = {}
     for app in ("convolution", "stereo"):
@@ -47,7 +47,7 @@ def main() -> int:
         designs[app] = compile_pipeline(uf)
 
     frames = _mixed_frames()
-    with FrameServer(max_batch=8, max_delay_ms=5.0) as srv:
+    with FrameServer(ServeConfig(max_batch=8, max_delay_ms=5.0)) as srv:
         for app, d in designs.items():
             srv.register(d, name=app)
         futs = [(app, inp, srv.submit(inp, app=app)) for app, inp in frames]

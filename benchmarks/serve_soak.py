@@ -1,0 +1,134 @@
+"""CI serve-soak: the control plane under a recorded-and-replayed trace.
+
+Two apps on one server with distinct QoS classes (convolution: high
+priority, uncapped; stereo: low priority, token-bucket capped).  Phase 1
+offers paced nominal mixed-priority traffic with trace capture on and
+must shed nothing.  Phase 2 replays the *recorded* trace time-compressed
+``OVERLOAD_X``-fold (``ServeTrace.scaled``) — same arrival shape, 4x the
+offered load — and must shed low-priority work with typed ``Overloaded``
+errors while the high-priority p99 stays within 2x of nominal (both p99s
+floored: sub-floor latencies are scheduler jitter, not signal).  The
+recorded trace also round-trips through JSON and drives
+``replay_trace_ingest`` so the cycle engine predicts the request FIFO's
+high-water mark from *measured* arrivals; predicted-vs-observed is
+printed for the CI log.
+
+    PYTHONPATH=src python -m benchmarks.serve_soak
+"""
+from __future__ import annotations
+
+import os
+import sys
+import tempfile
+import time
+
+import numpy as np
+
+N_EVENTS = 96                # per phase, alternating high/low apps
+NOMINAL_GAP_S = 1 / 32.0     # 32 fps offered: far below dispatch capacity
+OVERLOAD_X = 4
+LOW_RATE_FPS = 20.0          # low-pri cap: nominal low rate (16fps) fits,
+LOW_BURST = 4                # the 4x replay (64fps) must not
+P99_FLOOR_S = 0.025
+MAX_BATCH = 8
+MAX_DELAY_MS = 10.0
+
+
+def _build_server():
+    from repro.apps import BENCH_CASES
+    from repro.core import compile_pipeline
+    from repro.serve import FrameServer, QoSPolicy, ServeConfig
+
+    makers = {}
+    srv = FrameServer(ServeConfig(max_batch=MAX_BATCH,
+                                  max_delay_ms=MAX_DELAY_MS))
+    for app, policy in (
+            ("convolution", QoSPolicy(priority="high")),
+            ("stereo", QoSPolicy(priority="low", rate_fps=LOW_RATE_FPS,
+                                 burst=LOW_BURST))):
+        uf, inputs_fn = BENCH_CASES[app]()
+        design = compile_pipeline(uf)
+        frame = inputs_fn(np.random.RandomState(0))
+        srv.register(design, name=app, backend="jax", warm_inputs=[frame],
+                     policy=policy)
+        makers[app] = frame
+    return srv, makers
+
+
+def _offer(srv, makers, gaps):
+    """Submit one frame per (app, gap) pair, pacing by the gaps; returns
+    (sheds, completed, high-pri p99 seconds)."""
+    from repro.serve import Overloaded
+    apps = sorted(makers)                     # convolution, stereo
+    futs, sheds = [], 0
+    for i, gap in enumerate(gaps):
+        app = apps[i % len(apps)]
+        try:
+            futs.append(srv.submit(makers[app], app=app))
+        except Overloaded as e:
+            assert e.app == "stereo", (
+                f"high-priority app shed: {e}")
+            sheds += 1
+        if gap > 0:
+            time.sleep(gap)
+    for f in futs:
+        f.result(timeout=600)
+    p99 = srv.health.app("convolution").latency_quantiles()["p99"]
+    return sheds, len(futs), p99
+
+
+def main() -> int:
+    from repro.serve import ServeTrace
+
+    srv, makers = _build_server()
+    with srv:
+        # phase 1: nominal paced traffic, trace capture on
+        sheds_nom, done_nom, p99_nom = _offer(
+            srv, makers, [NOMINAL_GAP_S] * N_EVENTS)
+        if sheds_nom:
+            print(f"serve-soak FAILED: {sheds_nom} sheds at nominal load")
+            return 1
+        trace = srv.trace
+
+        # the recorded trace round-trips through JSON (the soak harness's
+        # persistence path) before being replayed
+        with tempfile.TemporaryDirectory() as td:
+            path = os.path.join(td, "trace.json")
+            trace.save(path)
+            trace = ServeTrace.load(path)
+        if len(trace) < N_EVENTS:
+            print(f"serve-soak FAILED: trace recorded {len(trace)} "
+                  f"< {N_EVENTS} arrivals")
+            return 1
+
+        # measured-arrival FIFO sizing: predicted vs observed hwm
+        pred = srv.replay_trace_ingest(trace=trace)
+        print(f"# ingest: predicted hwm={pred.hwm}/{pred.capacity} "
+              f"(rho={pred.utilization:.2f}, {pred.source}) "
+              f"observed hwm={srv.stats.queue_hw}")
+
+        # phase 2: replay the same arrival shape at 4x offered load
+        ts = trace.scaled(OVERLOAD_X).arrival_times()
+        gaps = list(np.diff(ts)) + [0.0]
+        sheds_over, done_over, p99_over = _offer(srv, makers, gaps)
+        for ln in srv.stats.report_lines():
+            print(f"# {ln}")
+
+    if sheds_over == 0:
+        print(f"serve-soak FAILED: {OVERLOAD_X}x replay shed nothing")
+        return 1
+    p99_x = max(p99_over, P99_FLOOR_S) / max(p99_nom, P99_FLOOR_S)
+    if p99_x > 2.0:
+        print(f"serve-soak FAILED: high-pri p99 {p99_over * 1e3:.1f}ms at "
+              f"{OVERLOAD_X}x replay vs {p99_nom * 1e3:.1f}ms nominal "
+              f"({p99_x:.2f}x)")
+        return 1
+    print(f"serve-soak OK: nominal {done_nom} frames 0 sheds; "
+          f"{OVERLOAD_X}x replay {done_over} frames {sheds_over} low-pri "
+          f"sheds, high-pri p99 {p99_over * 1e3:.1f}ms "
+          f"({p99_x:.2f}x nominal)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

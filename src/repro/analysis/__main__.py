@@ -35,9 +35,10 @@ STATIC_ONLY = {("pyramid", "z3")}
 def _run_one(name: str, solver: str, engine: str, sim: bool
              ) -> VerifyResult:
     from ..apps import SIM_CASES
-    from ..core import compile_pipeline
+    from ..core import CompileOptions, compile_pipeline
     uf, T, _hand = SIM_CASES[name]()
-    design = compile_pipeline(uf, T=T, fifo_solver=solver)
+    design = compile_pipeline(uf, T=T,
+                              options=CompileOptions(fifo_solver=solver))
     res = verify_design(design, sim=sim, engine=engine)
     res.name = f"{name}[{solver}]"
     return res

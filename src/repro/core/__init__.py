@@ -8,10 +8,11 @@ Public surface:
   schedule — trace model F_L(t), burst fitting (§4.2-4.3)
   buffers  — FIFO allocation via register minimization, Z3/LP (§4.2)
   mapper   — local meets-or-exceeds mapping + conversions (§5)
-  lower    — automatic HWImg -> JAX/Pallas lowering (software §5.2 analog)
-  compile  — end-to-end compile driver
+  lowering — automatic HWImg -> JAX/Pallas lowering (software §5.2 analog)
+  compile  — end-to-end compile driver; typed CompileOptions / SimOptions
 """
-from .compile import HWDesign, compile_pipeline  # noqa: F401
+from .compile import (CompileOptions, HWDesign, SimOptions,  # noqa: F401
+                      compile_pipeline)
 from .dtypes import (Array2d, ArrayT, Bits, Bool, Float, Int, SparseT,  # noqa
                      TupleT, UInt)
 from .hwimg import (Abs, AbsDiff, Add, AddAsync, AddMSBs, And, ArgMin,  # noqa
@@ -23,8 +24,8 @@ from .hwimg import (Abs, AbsDiff, Add, AddAsync, AddMSBs, And, ArgMin,  # noqa
 
 
 def __getattr__(name):
-    # lazy: lower.py imports jax; numpy-only flows shouldn't pay for it
+    # lazy: lowering imports jax; numpy-only flows shouldn't pay for it
     if name in ("LoweredPipeline", "lower_pipeline", "LOWERERS"):
-        from . import lower
-        return getattr(lower, name)
+        from . import lowering
+        return getattr(lowering, name)
     raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -1,6 +1,7 @@
 """Top-level HWTool compile driver.
 
-compile_pipeline(uf, T) runs the full paper flow:
+compile_pipeline(uf, T, options=CompileOptions(...)) runs the full paper
+flow:
   1. pipeline interface solve (Static vs Stream, §5.1)
   2. SDF rate propagation (§4.1)
   3. local mapping of every operator, meets-or-exceeds (§5.2)
@@ -9,10 +10,21 @@ compile_pipeline(uf, T) runs the full paper flow:
 
 and returns an HWDesign with the module netlist, solved FIFOs, resource and
 cycle-count report, and a bit-accurate executable (executor.py).
+
+Typed options surfaces (the documented entry points):
+
+- :class:`CompileOptions` — solver/backend/burst knobs for
+  ``compile_pipeline`` (the loose kwargs still work but emit
+  ``DeprecationWarning``);
+- :class:`SimOptions` — the shared engine/frames/max_cycles bundle for
+  ``HWDesign.simulate()`` / ``optimize_fifos()`` / ``verify()``;
+- ``repro.serve.ServeConfig`` — accepted by ``HWDesign.serve(config=...)``
+  so typos raise instead of vanishing into ``**config``.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+import warnings
+from dataclasses import dataclass, field, fields
 from fractions import Fraction
 from typing import Any, Dict, List, Optional, Tuple
 
@@ -26,6 +38,85 @@ from .mapper import (MAPPERS, WIRING_OPS, Site, make_converter, make_fanout,
                      solve_interface, solve_rates)
 from .rigel import (Resources, RModule, STATIC, STREAM,
                     fifo_resources)
+
+BACKENDS = ("numpy", "jax", "pallas")
+FIFO_SOLVERS = ("z3", "lp", "asap", "sim")
+
+
+@dataclass(frozen=True)
+class CompileOptions:
+    """Typed option bundle for :func:`compile_pipeline`.
+
+    ``fifo_solver``: "z3" (paper), "lp", "asap", or "sim" — measured, not
+    bounded, buffering (paper §7.3): solve analytically (z3), then run the
+    cycle simulator over ``sim_frames`` back-to-back frames, shrink every
+    FIFO to its steady-state high-water mark (+``sim_guard``), re-simulate
+    to prove the run time unchanged, and install the proven depths.
+    ``include_burst=False`` + ``manual_fifo_overrides`` reproduce *manual*
+    FIFO allocation (paper §7.2/§7.3).  ``backend`` is the default
+    execution engine for ``HWDesign.run`` — "numpy" (reference executor),
+    "jax" (automatic jnp lowering), or "pallas" (jnp lowering + fused
+    dispatch to the resident Pallas kernels).
+    """
+    fifo_solver: str = "z3"
+    include_burst: bool = True
+    manual_fifo_overrides: Optional[Dict[str, int]] = None
+    backend: str = "numpy"
+    sim_frames: int = 2
+    sim_guard: int = 0
+
+    def __post_init__(self):
+        if self.backend not in BACKENDS:
+            raise ValueError(f"unknown backend {self.backend!r} "
+                             f"(want one of {BACKENDS})")
+        if self.fifo_solver not in FIFO_SOLVERS:
+            raise ValueError(f"unknown fifo_solver {self.fifo_solver!r} "
+                             f"(want one of {FIFO_SOLVERS})")
+        if self.sim_frames < 1:
+            raise ValueError("sim_frames must be >= 1")
+        if self.sim_guard < 0:
+            raise ValueError("sim_guard must be >= 0")
+
+
+@dataclass(frozen=True)
+class SimOptions:
+    """The shared cycle-simulation bundle for ``HWDesign.simulate()``,
+    ``optimize_fifos()``, and ``verify()``: which cycle engine to run
+    ("auto" picks vectorized where supported), how many back-to-back
+    frames (steady state), and an optional cycle budget."""
+    engine: str = "auto"
+    frames: int = 1
+    max_cycles: Optional[int] = None
+
+    def __post_init__(self):
+        if self.engine not in ("auto", "scalar", "vector"):
+            raise ValueError(f"unknown engine {self.engine!r} "
+                             "(want auto, scalar, or vector)")
+        if self.frames < 1:
+            raise ValueError("frames must be >= 1")
+
+
+_UNSET = object()
+
+
+def _merge_deprecated(options, cls, deprecated: Dict[str, Any],
+                      what: str):
+    """The one resolver behind every typed-options entry point: loose
+    kwargs still work but emit ``DeprecationWarning`` and cannot be mixed
+    with an explicit options instance."""
+    given = {k: v for k, v in deprecated.items() if v is not _UNSET}
+    if not given:
+        return options if options is not None else cls()
+    if options is not None:
+        raise TypeError(
+            f"{what}: pass either options={cls.__name__}(...) or the "
+            f"deprecated loose kwargs ({', '.join(sorted(given))}), "
+            "not both")
+    warnings.warn(
+        f"{what}: the {', '.join(sorted(given))} kwarg(s) are deprecated; "
+        f"pass options={cls.__name__}(...)",
+        DeprecationWarning, stacklevel=3)
+    return cls(**given)
 
 
 @dataclass
@@ -107,49 +198,63 @@ class HWDesign:
         return ok
 
     def simulate(self, fifo_depths: Optional[Dict[Tuple[int, int], int]] = None,
-                 unbounded: bool = False, max_cycles: Optional[int] = None,
-                 sample_every: int = 0, frames: int = 1,
-                 engine: str = "auto"):
+                 unbounded: bool = False, sample_every: int = 0,
+                 options: Optional[SimOptions] = None, *,
+                 max_cycles=_UNSET, frames=_UNSET, engine=_UNSET):
         """Cycle-level dataflow simulation of the mapped module graph
         (repro/hwsim): valid/ready token handshakes over the solved FIFO
         depths (or ``fifo_depths`` overrides; ``unbounded=True`` removes
-        all capacity limits). ``frames`` runs back-to-back frames (steady
-        state); ``engine`` picks the vectorized or scalar cycle engine.
-        Returns a SimResult with the run's cycle count, sink throughput,
-        per-FIFO high-water marks and a deadlock diagnosis. The latest
-        result feeds ``report()``."""
+        all capacity limits). ``options`` (a :class:`SimOptions`) selects
+        the cycle engine, back-to-back frame count (steady state), and
+        cycle budget; the loose ``engine=``/``frames=``/``max_cycles=``
+        kwargs are deprecated aliases.  Returns a SimResult with the
+        run's cycle count, sink throughput, per-FIFO high-water marks and
+        a deadlock diagnosis. The latest result feeds ``report()``."""
+        opt = _merge_deprecated(options, SimOptions,
+                                dict(max_cycles=max_cycles, frames=frames,
+                                     engine=engine), "HWDesign.simulate")
         from ..hwsim import simulate as _simulate  # lazy, like serve/lower
         res = _simulate(self, fifo_depths=fifo_depths, unbounded=unbounded,
-                        max_cycles=max_cycles, sample_every=sample_every,
-                        frames=frames, engine=engine)
+                        max_cycles=opt.max_cycles, sample_every=sample_every,
+                        frames=opt.frames, engine=opt.engine)
         self._hwsim[:] = [res]
         return res
 
     def optimize_fifos(self, guard: int = 0,
-                       max_cycles: Optional[int] = None, frames: int = 1,
-                       engine: str = "auto"):
+                       options: Optional[SimOptions] = None, *,
+                       max_cycles=_UNSET, frames=_UNSET, engine=_UNSET):
         """Simulation-guided FIFO allocation (repro/hwsim.allocate): shrink
         every FIFO from its analytic depth to the simulated high-water mark
         (+``guard``), re-simulate to prove the frame time is unchanged, and
-        return the AllocationResult (``frames > 1`` sizes against the
-        steady state). The result feeds ``report()``."""
+        return the AllocationResult (``SimOptions.frames > 1`` sizes
+        against the steady state). The result feeds ``report()``."""
+        opt = _merge_deprecated(options, SimOptions,
+                                dict(max_cycles=max_cycles, frames=frames,
+                                     engine=engine),
+                                "HWDesign.optimize_fifos")
         from ..hwsim import allocate_fifos
-        alloc = allocate_fifos(self, guard=guard, max_cycles=max_cycles,
-                               frames=frames, engine=engine)
+        alloc = allocate_fifos(self, guard=guard, max_cycles=opt.max_cycles,
+                               frames=opt.frames, engine=opt.engine)
         self._hwsim[:] = [alloc]
         return alloc
 
-    def verify(self, sim: bool = True, engine: str = "auto",
-               backend: str = "jax"):
+    def verify(self, sim: bool = True, backend: str = "jax",
+               options: Optional[SimOptions] = None, *, engine=_UNSET):
         """Static verification (repro/analysis): value-range analysis with
         wrap-freedom proofs / witnesses over the HWImg DAG, the rewrite
         fixpoint re-run under the IR structural-invariant checker, and the
         netlist handshake/deadlock lint with its three-way differential
         oracle ``static_lower <= simulated hwm <= analytic capacity``
         (``sim=False`` skips the two hwsim runs the oracle needs).
-        Returns a VerifyResult; the latest result feeds ``report()``."""
+        ``options`` shares :class:`SimOptions` with ``simulate()`` (only
+        the engine field applies here; ``engine=`` is the deprecated
+        alias).  Returns a VerifyResult; the latest result feeds
+        ``report()``."""
+        opt = _merge_deprecated(options, SimOptions, dict(engine=engine),
+                                "HWDesign.verify")
         from ..analysis import verify_design  # lazy, like serve/lower
-        res = verify_design(self, sim=sim, engine=engine, backend=backend)
+        res = verify_design(self, sim=sim, engine=opt.engine,
+                            backend=backend)
         self._verify[:] = [res]
         return res
 
@@ -207,31 +312,55 @@ class HWDesign:
                          for j in range(len(outs[0])))
         return np.stack(outs)
 
-    def serve(self, backend: Optional[str] = None, **config):
+    def serve(self, backend: Optional[str] = None, config=None,
+              warm_inputs=None, policy=None, **deprecated):
         """Boot a streaming frame server (repro/serve/) for this design and
-        return the started server: an asyncio micro-batcher buckets frames
-        by input signature, stacks them to a size/deadline budget, and
-        dispatches double-buffered batches through the lowering engine with
-        the frame axis sharded across available devices.  Use as a context
-        manager::
+        return the started server: an asyncio scheduler admits frames
+        through per-app QoS classes (load shedding with typed
+        ``Overloaded`` errors), buckets them by input signature, tops
+        batches up while the previous batch is in flight (continuous
+        batching), and dispatches double-buffered batches through the
+        lowering engine with the frame axis sharded across available
+        devices.  Use as a context manager::
 
-            with design.serve(max_batch=8) as srv:
+            with design.serve(config=ServeConfig(max_batch=8)) as srv:
                 fut = srv.submit({"convolution.in": frame})
                 out = fut.result()
 
-        ``backend`` defaults to the design's backend, or "jax" when that is
-        "numpy" (serving batches through the jit engine).  ``config`` is
-        forwarded to ``ServeConfig`` (max_batch, max_delay_ms, max_queue,
-        depth, donate, ...).  The most recent server's stats feed back
-        into ``report()`` (only the latest is kept: each ServeStats holds
-        a latency reservoir, so unbounded accumulation across repeated
-        serve sessions would leak)."""
-        from ..serve import FrameServer  # lazy: keep numpy-only flows light
+        ``backend`` defaults to the design's backend, or "jax" when that
+        is "numpy" (the numpy reference executor has no batched jit path;
+        the swap is recorded in ``design.notes`` and shows up in
+        ``report()`` / ``ServeStats``).  ``config`` is a
+        :class:`repro.serve.ServeConfig`; loose ServeConfig kwargs
+        (``max_batch=...`` etc.) are deprecated aliases.  ``warm_inputs``
+        (exemplar frame dicts) and ``policy`` (a QoSPolicy) forward to
+        ``FrameServer.register``.  The most recent server's stats feed
+        back into ``report()`` (only the latest is kept: each ServeStats
+        holds a latency reservoir, so unbounded accumulation across
+        repeated serve sessions would leak)."""
+        from ..serve import FrameServer, ServeConfig  # lazy import
+        if deprecated:
+            if config is not None:
+                raise TypeError(
+                    "HWDesign.serve: pass either config=ServeConfig(...) "
+                    "or the deprecated loose kwargs "
+                    f"({', '.join(sorted(deprecated))}), not both")
+            warnings.warn(
+                "HWDesign.serve(**config_kwargs) is deprecated; pass "
+                f"config=ServeConfig({', '.join(sorted(deprecated))}=...)",
+                DeprecationWarning, stacklevel=2)
+            config = ServeConfig(**deprecated)
         b = backend or self.backend
         if b == "numpy":
             b = "jax"
-        srv = FrameServer(**config)
-        srv.register(self, backend=b)
+            note = ("serve: backend 'numpy' swapped to 'jax' (serving "
+                    "batches through the jit engine; pass backend= to "
+                    "override)")
+            if note not in self.notes:
+                self.notes.append(note)
+        srv = FrameServer(config=config)
+        srv.register(self, backend=b, warm_inputs=warm_inputs,
+                     policy=policy)
         self._serve_stats[:] = [srv.stats]
         srv.start()
         return srv
@@ -292,22 +421,26 @@ class HWDesign:
 
 
 def compile_pipeline(uf: UserFunction, T: Fraction = Fraction(1),
-                     fifo_solver: str = "z3",
-                     include_burst: bool = True,
-                     manual_fifo_overrides: Optional[Dict[str, int]] = None,
-                     backend: str = "numpy",
-                     sim_frames: int = 2,
-                     sim_guard: int = 0,
-                     ) -> HWDesign:
+                     options: Optional[CompileOptions] = None, *,
+                     fifo_solver=_UNSET, include_burst=_UNSET,
+                     manual_fifo_overrides=_UNSET, backend=_UNSET,
+                     sim_frames=_UNSET, sim_guard=_UNSET) -> HWDesign:
     """The full HWTool flow for one pipeline at target throughput T.
 
-    ``fifo_solver``: "z3" (paper), "lp", "asap", or "sim" — measured, not
-    bounded, buffering (paper §7.3): solve analytically (z3), then run the
-    cycle simulator over ``sim_frames`` back-to-back frames, shrink every
-    FIFO to its steady-state high-water mark (+``sim_guard``), re-simulate
-    to prove the run time unchanged, and install the proven depths in the
-    returned design (``report()`` shows analytic vs simulated side by
-    side; the analytic depths stay available as ``fifo_analytic``).
+    All compile-time knobs live on :class:`CompileOptions`
+    (``compile_pipeline(uf, T, options=CompileOptions(...))``); the loose
+    ``fifo_solver=`` / ``include_burst=`` / ``manual_fifo_overrides=`` /
+    ``backend=`` / ``sim_frames=`` / ``sim_guard=`` kwargs are deprecated
+    aliases that emit ``DeprecationWarning``.
+
+    ``CompileOptions.fifo_solver``: "z3" (paper), "lp", "asap", or "sim" —
+    measured, not bounded, buffering (paper §7.3): solve analytically
+    (z3), then run the cycle simulator over ``sim_frames`` back-to-back
+    frames, shrink every FIFO to its steady-state high-water mark
+    (+``sim_guard``), re-simulate to prove the run time unchanged, and
+    install the proven depths in the returned design (``report()`` shows
+    analytic vs simulated side by side; the analytic depths stay
+    available as ``fifo_analytic``).
     ``include_burst=False`` + overrides reproduce *manual* FIFO allocation
     (paper §7.2/§7.3): the user zeroes burst slack on modules whose bursts
     are absorbed elsewhere (e.g. pad/crop backed by AXI DMA).
@@ -315,8 +448,17 @@ def compile_pipeline(uf: UserFunction, T: Fraction = Fraction(1),
     "numpy" (reference executor), "jax" (automatic jnp lowering), or
     "pallas" (jnp lowering + fused dispatch to the resident Pallas kernels).
     """
-    if backend not in ("numpy", "jax", "pallas"):
-        raise ValueError(f"unknown backend {backend!r}")
+    opt = _merge_deprecated(
+        options, CompileOptions,
+        dict(fifo_solver=fifo_solver, include_burst=include_burst,
+             manual_fifo_overrides=manual_fifo_overrides, backend=backend,
+             sim_frames=sim_frames, sim_guard=sim_guard),
+        "compile_pipeline")
+    backend = opt.backend
+    include_burst = opt.include_burst
+    manual_fifo_overrides = opt.manual_fifo_overrides
+    sim_frames, sim_guard = opt.sim_frames, opt.sim_guard
+    fifo_solver = opt.fifo_solver
     sim_solver = fifo_solver == "sim"
     if sim_solver:
         fifo_solver = "z3"        # the analytic solve the simulation tightens
@@ -454,7 +596,8 @@ def compile_pipeline(uf: UserFunction, T: Fraction = Fraction(1),
     if sim_solver:
         # measured-not-bounded FIFO sizing (§7.3): simulate, shrink to the
         # steady-state high-water marks, prove, install
-        alloc = design.optimize_fifos(guard=sim_guard, frames=sim_frames)
+        alloc = design.optimize_fifos(guard=sim_guard,
+                                      options=SimOptions(frames=sim_frames))
         design.fifo_analytic = dict(alloc.analytic)
         design.fifo_sim_proven = alloc.proven
         design.fifo = fifo.with_depths(alloc.depths, edges, solver="sim")

@@ -18,7 +18,7 @@ from .allocate import AllocationResult, allocate_fifos  # noqa: F401
 from .area import (AreaRow, BRAM_CLB_EQUIV, area_units,  # noqa: F401
                    compare, fifo_area, table_lines)
 from .ingest import (IngestResult, poisson_arrival_cycles,  # noqa: F401
-                     simulate_ingest)
+                     replay_ingest, simulate_ingest)
 from .occupancy import EdgeOccupancy, OccupancyTrace  # noqa: F401
 from .sim import (CycleSim, NeedSpec, PROFILED, SimResult,  # noqa: F401
                   UNEXERCISED_BURSTY, build_sim, need_spec, simulate)

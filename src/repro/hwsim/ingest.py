@@ -9,13 +9,22 @@ so the same cycle engine sizes it. The netlist is three modules:
     clock ──(unbounded)──▶ arrivals ──(ingest FIFO, cap=max_queue)──▶ server
 
 ``clock`` emits one token per cycle; ``arrivals`` turns clock ticks into
-frames via a *profiled* need trace built from a seeded Poisson process
-(need of frame k = its arrival cycle + 1 — exactly the mechanism the
-hardware sim uses for Pad/Crop consumption profiles); ``server`` drains
-the ingest FIFO at the observed service rate through the rate-R token
+frames via a *profiled* need trace built from the arrival process (need
+of frame k = its arrival cycle + 1 — exactly the mechanism the hardware
+sim uses for Pad/Crop consumption profiles); ``server`` drains the
+ingest FIFO at the observed service rate through the rate-R token
 bucket. The ingest edge's simulated high-water mark is the predicted
 steady-state queue occupancy, surfaced next to the *observed* high-water
 mark in ``ServeStats.report_lines``.
+
+Two arrival models share the engine:
+
+- :func:`simulate_ingest` — a seeded Poisson profile (exponential gaps),
+  the a-priori model;
+- :func:`replay_ingest` — an explicit arrival-cycle array, e.g. a
+  recorded :class:`repro.serve.ServeTrace` mapped onto the cycle axis,
+  so FIFO sizing uses the *measured* arrival process (real burstiness)
+  instead of the Poisson assumption.
 """
 from __future__ import annotations
 
@@ -54,6 +63,7 @@ class IngestResult:
     deadlock: Optional[str]
     mean_gap_cycles: float
     service_rate: Fraction     # frames per cycle
+    source: str = "poisson"    # arrival model: "poisson" | "trace"
 
     @property
     def completed(self) -> bool:
@@ -68,25 +78,31 @@ class IngestResult:
     def report_lines(self) -> List[str]:
         status = "ok" if self.completed else f"STALLED: {self.deadlock}"
         return [f"ingest fifo: predicted hwm={self.hwm}/{self.capacity} "
-                f"(rho={self.utilization:.2f}, {self.frames} poisson "
+                f"(rho={self.utilization:.2f}, {self.frames} {self.source} "
                 f"frames, {status})"]
 
 
-def simulate_ingest(n_frames: int, mean_gap_cycles: float,
-                    service_rate: Fraction, capacity: int,
-                    seed: int = 0) -> IngestResult:
-    """Push ``n_frames`` Poisson arrivals through a bounded ingest FIFO
-    drained at ``service_rate`` and return the FIFO's high-water mark.
+def _run_ingest(arrivals: np.ndarray, service_rate: Fraction,
+                capacity: int, source: str) -> IngestResult:
+    """Push an explicit arrival-cycle profile through the bounded ingest
+    FIFO drained at ``service_rate`` and return its high-water mark.
 
     Uses the scalar cycle engine directly: the netlist is three modules and
     the horizon is O(n_frames / min(rate)) cycles, far below where the
     vectorized engine's compile cost pays off."""
     if capacity < 1:
         raise ValueError("capacity must be >= 1")
+    arrivals = np.asarray(arrivals, dtype=np.int64)
+    n_frames = int(len(arrivals))
+    if n_frames < 1:
+        raise ValueError("need at least one arrival")
+    if np.any(np.diff(arrivals) < 0):
+        raise ValueError("arrival cycles must be non-decreasing")
     service_rate = Fraction(service_rate).limit_denominator(10 ** 6)
     if not 0 < service_rate <= 1:
         raise ValueError("service_rate must be in (0, 1] frames/cycle")
-    arrivals = poisson_arrival_cycles(n_frames, mean_gap_cycles, seed=seed)
+    mean_gap = (float(arrivals[-1] - arrivals[0]) / (n_frames - 1)
+                if n_frames > 1 else float(arrivals[-1]) or 1.0)
     drain = int(n_frames * service_rate.denominator
                 // service_rate.numerator)
     ticks = int(arrivals[-1]) + drain + capacity + 64
@@ -133,5 +149,28 @@ def simulate_ingest(n_frames: int, mean_gap_cycles: float,
     return IngestResult(hwm=occ.hwm, hwm_cycle=occ.hwm_cycle,
                         capacity=capacity, frames=n_frames,
                         cycles=res.cycles, deadlock=deadlock,
-                        mean_gap_cycles=float(mean_gap_cycles),
-                        service_rate=service_rate)
+                        mean_gap_cycles=mean_gap,
+                        service_rate=service_rate, source=source)
+
+
+def simulate_ingest(n_frames: int, mean_gap_cycles: float,
+                    service_rate: Fraction, capacity: int,
+                    seed: int = 0) -> IngestResult:
+    """Push ``n_frames`` Poisson arrivals through a bounded ingest FIFO
+    drained at ``service_rate`` and return the FIFO's high-water mark."""
+    arrivals = poisson_arrival_cycles(n_frames, mean_gap_cycles, seed=seed)
+    res = _run_ingest(arrivals, service_rate, capacity, source="poisson")
+    # report the *configured* mean gap, not the realized sample mean, so
+    # utilization matches the requested Poisson profile exactly
+    res.mean_gap_cycles = float(mean_gap_cycles)
+    return res
+
+
+def replay_ingest(arrival_cycles, service_rate: Fraction,
+                  capacity: int) -> IngestResult:
+    """Replay an explicit arrival-cycle profile (e.g. a recorded serve
+    trace mapped onto the cycle axis via ``ServeTrace.arrival_cycles``)
+    through the bounded ingest FIFO — measured burstiness instead of the
+    Poisson assumption."""
+    return _run_ingest(np.sort(np.asarray(arrival_cycles, dtype=np.int64)),
+                       service_rate, capacity, source="trace")

@@ -2,17 +2,31 @@
 
 The paper's hardware serves continuous pixel streams at line rate; this
 package is the software serving layer over the lowering compiler
-(core/lowering/): an asyncio server (server.py) feeds a dynamic
-micro-batcher (batcher.py) that buckets frames by input signature so every
-stacked batch hits the engine's per-signature jit cache, dispatches
-through a double-buffered executor (dispatch.py) overlapping transfer of
-batch N+1 with compute of batch N, and shards the stacked frame axis
-across available devices (sharding.py) with a transparent single-device
-fallback.  Entry points: ``HWDesign.serve(...)`` or ``serve_design``.
+(core/lowering/), grown into a control plane: an asyncio server
+(server.py) admits requests through per-app QoS classes, token-bucket
+rate limits, and queue-depth load shedding (admission.py — typed
+``Overloaded`` rejections instead of uniform backpressure stalls), feeds
+a continuous (rolling) micro-batcher (batcher.py) that buckets frames by
+input signature and tops batches up while the previous batch is in
+flight, dispatches through a double-buffered executor (dispatch.py)
+overlapping transfer of batch N+1 with compute of batch N, and shards
+the stacked frame axis across available devices (sharding.py) with a
+transparent single-device fallback.  Warmup pre-compiles every (app,
+signature, pow2-batch) bucket before traffic; per-app health, latency
+quantiles, and batch-occupancy histograms live in health.py together
+with the replayable arrival trace that feeds ``repro.hwsim.ingest``.
+
+Entry points: ``HWDesign.serve(config=ServeConfig(...))``,
+``serve_design``, and ``python -m repro.serve --status``.
 """
+from .admission import (HIGH, LOW, NORMAL, PRIORITIES,  # noqa: F401
+                        AdmissionController, Overloaded, QoSPolicy,
+                        TokenBucket)
 from .batcher import (FrameRequest, MicroBatcher,  # noqa: F401
                       frame_signature, split_frames, stack_frames)
 from .dispatch import BatchDispatcher, InflightBatch  # noqa: F401
+from .health import (AppHealth, HealthMonitor, ServeTrace,  # noqa: F401
+                     TraceEvent)
 from .server import (FrameServer, ServeConfig, ServeStats,  # noqa: F401
                      serve_design)
 from .sharding import (device_put_batch, frame_sharding,  # noqa: F401

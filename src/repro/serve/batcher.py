@@ -2,10 +2,25 @@
 
 Incoming frames are bucketed by (app, per-frame input signature) so that a
 flushed batch is always stackable — same shapes, same dtypes — and hits
-the lowering engine's per-signature jit cache.  A bucket flushes when it
-reaches ``max_batch`` frames (size flush) or when its oldest frame has
-waited ``max_delay_s`` (deadline flush), whichever comes first; the server
-loop drives deadlines via ``next_deadline()``/``due(now)``.
+the lowering engine's per-signature jit cache.
+
+Two batching disciplines share the bucket store:
+
+- **flush-the-bucket** (push API: ``add``/``due``): a bucket flushes when
+  it reaches ``max_batch`` frames (size flush) or when its oldest frame
+  has waited ``max_delay_s`` (deadline flush) — a partial bucket stalls
+  for the deadline even while the compute pipeline sits idle.
+- **continuous (rolling) batching** (pull API: ``put``/``take``): buckets
+  are a rolling admission window.  The server *pulls* a batch whenever a
+  compute slot frees: a full bucket first, else an expired one, else —
+  when the pipeline would otherwise idle — the best partial bucket
+  (highest priority class, then fullest, then oldest).  While a batch is
+  in flight the window keeps topping up, so the batch dispatched when the
+  slot frees is as full as the interim arrivals allow and dispatch never
+  idles behind a deadline timer.
+
+``take`` always drains a *single* bucket (at most ``max_batch`` frames),
+so a rolling batch can never mix signatures, exactly like a flushed one.
 
 Buckets are the serving-layer analog of the paper's FIFO allocation: each
 is a bounded queue whose occupancy (current + high-water) is accounted in
@@ -37,6 +52,7 @@ class FrameRequest:
     signature: Tuple
     enqueue_t: float
     future: Any = None                # concurrent.futures.Future (or None)
+    priority: int = 1                 # admission.NORMAL (0=high .. 2=low)
 
 
 def _stack(leaves: List[Any]):
@@ -104,6 +120,7 @@ class MicroBatcher:
         self.pending_hw = 0
         self.size_flushes = 0
         self.deadline_flushes = 0
+        self.topup_flushes = 0        # partial batches pulled by a free slot
 
     def key_of(self, req: FrameRequest) -> Tuple:
         return (req.app, req.signature)
@@ -111,16 +128,75 @@ class MicroBatcher:
     def add(self, req: FrameRequest, now: float) -> List[List[FrameRequest]]:
         """Enqueue one frame; returns the batches this arrival completed
         (at most one: the request's own bucket reaching ``max_batch``)."""
+        self.put(req, now)
+        b = self._buckets[self.key_of(req)]
+        if len(b.reqs) >= self.max_batch:
+            self.size_flushes += 1
+            return [self._flush(self.key_of(req))]
+        return []
+
+    # ---- pull API (continuous / rolling batching) ----
+    def put(self, req: FrameRequest, now: float) -> None:
+        """Enqueue one frame into its rolling window, flushing nothing:
+        batches leave via ``take`` when the server has a free slot."""
         b = self._buckets.setdefault(self.key_of(req), _Bucket())
         if not b.reqs:
             b.oldest_t = now
         b.reqs.append(req)
         self.pending += 1
         self.pending_hw = max(self.pending_hw, self.pending)
-        if len(b.reqs) >= self.max_batch:
+
+    def has_pending(self) -> bool:
+        return self.pending > 0
+
+    def take(self, now: float, allow_partial: bool = False,
+             partial_hold_s: float = 0.0) -> Optional[List[FrameRequest]]:
+        """Pull the next dispatchable batch (up to ``max_batch`` frames
+        from ONE bucket — never mixing signatures), or None.
+
+        Selection order: a full bucket (size flush) first, then a bucket
+        whose oldest frame has expired (deadline flush), then — only with
+        ``allow_partial`` (a compute slot would otherwise idle) — the
+        best partial bucket: most important priority class, then most
+        frames, then oldest.  A partial is top-up eligible only once its
+        oldest frame has waited ``partial_hold_s`` — the batching window
+        that keeps burst arrivals from being shattered into singleton
+        batches when compute keeps pace with the arrival gap.  The
+        un-taken remainder of an over-full bucket stays as the rolling
+        window's head, its deadline reset to the remaining oldest frame.
+        """
+        best_key, best_rank = None, None
+        for key, b in self._buckets.items():
+            if not b.reqs:
+                continue
+            full = len(b.reqs) >= self.max_batch
+            expired = now - b.oldest_t >= self.max_delay_s
+            held = now - b.oldest_t >= partial_hold_s
+            if not (full or expired or (allow_partial and held)):
+                continue
+            # rank: full beats expired beats topped-up partial; within a
+            # tier, highest priority class, then fullest, then oldest
+            tier = 0 if full else (1 if expired else 2)
+            rank = (tier, min(r.priority for r in b.reqs),
+                    -len(b.reqs), b.oldest_t)
+            if best_rank is None or rank < best_rank:
+                best_key, best_rank = key, rank
+        if best_key is None:
+            return None
+        b = self._buckets[best_key]
+        tier = best_rank[0]
+        if tier == 0:
             self.size_flushes += 1
-            return [self._flush(self.key_of(req))]
-        return []
+        elif tier == 1:
+            self.deadline_flushes += 1
+        else:
+            self.topup_flushes += 1
+        if len(b.reqs) <= self.max_batch:
+            return self._flush(best_key)
+        reqs, b.reqs = b.reqs[:self.max_batch], b.reqs[self.max_batch:]
+        b.oldest_t = b.reqs[0].enqueue_t
+        self.pending -= len(reqs)
+        return reqs
 
     def due(self, now: float) -> List[List[FrameRequest]]:
         """Deadline sweep: flush every bucket whose oldest frame has waited
@@ -140,6 +216,13 @@ class MicroBatcher:
     def next_deadline(self) -> Optional[float]:
         """Absolute time of the earliest pending deadline, or None."""
         ts = [b.oldest_t + self.max_delay_s
+              for b in self._buckets.values() if b.reqs]
+        return min(ts) if ts else None
+
+    def next_topup_ready(self, partial_hold_s: float) -> Optional[float]:
+        """Absolute time when the earliest pending bucket becomes top-up
+        eligible under ``partial_hold_s``, or None when nothing pends."""
+        ts = [b.oldest_t + partial_hold_s
               for b in self._buckets.values() if b.reqs]
         return min(ts) if ts else None
 

@@ -19,7 +19,7 @@ from repro.analysis.handshake import CAPACITY_SLOP_TOKENS
 from repro.apps import SIM_CASES
 from repro.core import (AddAsync, AddMSBs, Array2d, Const, Input, Map, Mul,
                         Reduce, RemoveMSBs, Rshift, Stencil, UInt,
-                        compile_pipeline)
+                        CompileOptions, compile_pipeline)
 from repro.core.dtypes import Bits, Int, widen
 from repro.core.executor import evaluate
 from repro.core.hwimg import Abs, AbsDiff, Add, Max, Min, Sub, toposort
@@ -56,8 +56,8 @@ def designs():
                           ("descriptor", ("z3",))):
         for solver in solvers:
             uf, T, _hand = SIM_CASES[name](**SIZES[name])
-            out[(name, solver)] = compile_pipeline(uf, T=T,
-                                                   fifo_solver=solver)
+            out[(name, solver)] = compile_pipeline(
+                uf, T=T, options=CompileOptions(fifo_solver=solver))
     return out
 
 

@@ -13,7 +13,7 @@ import numpy as np
 import pytest
 
 from repro.apps import SIM_CASES
-from repro.core import compile_pipeline
+from repro.core import CompileOptions, SimOptions, compile_pipeline
 from repro.hwsim import VectorSim, allocate_fifos, area_units, compare, \
     fifo_area
 from repro.hwsim.sim import (CycleSim, _need_proportional, _SimEdge,
@@ -92,8 +92,8 @@ def test_area_rows_reproduce_auto_vs_hand(designs):
         design, T, hand = designs[name]
         alloc = allocate_fifos(design)
         uf2, T2, _ = SIM_CASES[name](**SIZES[name])
-        hand_design = compile_pipeline(uf2, T=T2,
-                                       manual_fifo_overrides=hand)
+        hand_design = compile_pipeline(
+            uf2, T=T2, options=CompileOptions(manual_fifo_overrides=hand))
         row = compare(name, design, alloc, hand_design)
         r = row.ratios()
         # hand never costs more than fully-automatic; simulated sits at or
@@ -179,7 +179,8 @@ def test_vector_engine_is_default(designs):
     # sampling is scalar-only: auto falls back, explicit vector raises
     assert design.simulate(sample_every=64).engine == "scalar"
     with pytest.raises(ValueError):
-        design.simulate(sample_every=64, engine="vector")
+        design.simulate(sample_every=64,
+                        options=SimOptions(engine="vector"))
 
 
 def test_vector_unbounded_matches_scalar(designs):
@@ -246,8 +247,8 @@ def test_multiframe_steady_state_marks(designs, name):
     single-frame mark, and each mark's (cycle, frame) stamps are mutually
     consistent — the cycle stamp falls inside its frame stamp's window."""
     design, _, _ = designs[name]
-    one = design.simulate(frames=1)
-    multi = design.simulate(frames=3)
+    one = design.simulate(options=SimOptions(frames=1))
+    multi = design.simulate(options=SimOptions(frames=3))
     assert multi.sink_tokens == 3 * design.out_tokens_per_frame
     assert multi.frame_ends == sorted(set(multi.frame_ends))
     assert len(multi.frame_ends) == 3
@@ -268,8 +269,8 @@ def test_multiframe_residue_exceeds_single_frame(designs):
     arrive, so the steady-state mark on the crop's drain FIFO exceeds the
     single-frame mark — the effect single-frame simulation cannot see."""
     design, _, _ = designs["convolution"]
-    one = design.simulate(frames=1, unbounded=True)
-    multi = design.simulate(frames=3, unbounded=True)
+    one = design.simulate(unbounded=True, options=SimOptions(frames=1))
+    multi = design.simulate(unbounded=True, options=SimOptions(frames=3))
     h1, h3 = one.hwm_by_key(), multi.hwm_by_key()
     grew = [k for k in h1 if h3[k] > h1[k]]
     assert grew, "steady state must exceed single-frame somewhere"
@@ -296,7 +297,8 @@ def test_allocator_steady_state_depths(designs):
 def test_fifo_solver_sim_installs_proven_depths(designs):
     design, _, _ = designs["convolution"]
     uf, T, _ = SIM_CASES["convolution"](**SIZES["convolution"])
-    sim_design = compile_pipeline(uf, T=T, fifo_solver="sim", sim_frames=2)
+    sim_design = compile_pipeline(
+        uf, T=T, options=CompileOptions(fifo_solver="sim", sim_frames=2))
     assert sim_design.fifo.solver == "sim"
     assert sim_design.fifo_analytic == design.fifo.depth
     assert sim_design.fifo.total_bits <= design.fifo.total_bits
@@ -307,8 +309,8 @@ def test_fifo_solver_sim_installs_proven_depths(designs):
     assert sim_design.fifo.start == design.fifo.start
     # the proven depths complete a steady-state run at the same cycle
     # count as the analytic depths
-    ref = design.simulate(frames=2)
-    got = sim_design.simulate(frames=2)
+    ref = design.simulate(options=SimOptions(frames=2))
+    got = sim_design.simulate(options=SimOptions(frames=2))
     assert got.completed and got.cycles == ref.cycles
     rep = sim_design.report()
     assert "solver=sim" in rep
@@ -319,7 +321,8 @@ def test_fifo_solver_sim_area_never_exceeds_analytic(designs):
     for name in ("stereo", "descriptor"):
         design, _, _ = designs[name]
         uf, T, _ = SIM_CASES[name](**SIZES[name])
-        sim_design = compile_pipeline(uf, T=T, fifo_solver="sim")
+        sim_design = compile_pipeline(
+            uf, T=T, options=CompileOptions(fifo_solver="sim"))
         assert area_units(fifo_area(sim_design.fifo.depth,
                                     sim_design.edges)) <= \
             area_units(fifo_area(design.fifo.depth, design.edges))
@@ -336,7 +339,8 @@ def test_fifo_solver_sim_repairs_pyramid_deadlock():
     ana = compile_pipeline(uf, T=T)
     assert not ana.simulate().completed          # the gap this repairs
     uf2, T2, _ = SIM_CASES["pyramid"]()
-    design = compile_pipeline(uf2, T=T2, fifo_solver="sim")
+    design = compile_pipeline(uf2, T=T2,
+                              options=CompileOptions(fifo_solver="sim"))
     assert design.fifo.solver == "sim" and design.fifo_sim_proven
     grown = [k for k, d in design.fifo.depth.items()
              if d > ana.fifo.depth[k]]

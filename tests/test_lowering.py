@@ -14,7 +14,7 @@ from repro.core.dtypes import Int
 from repro.core.executor import evaluate
 from repro.core.hwimg import (Abs, AbsDiff, Add, External, Max, Min, Sub,
                               scalar_of)
-from repro.core.lower import lower_pipeline  # the back-compat shim
+from repro.core.lowering import lower_pipeline
 
 APPS = ["convolution", "stereo", "flow", "descriptor", "pyramid"]
 BACKENDS = ["jax", "pallas"]

@@ -25,7 +25,7 @@ from jax.experimental import enable_x64
 from repro.core import (AddMSBs, Array2d, Const, Crop, Downsample, Input,
                         Map, Max, Mul, Pad, Reduce, Stencil, UInt)
 from repro.core.executor import evaluate
-from repro.core.lower import lower_pipeline
+from repro.core.lowering import lower_pipeline
 from repro.core.lowering.megakernel import FLOAT_ULP_BOUND, emit_megakernel
 
 APPS = ["convolution", "stereo", "flow", "descriptor", "pyramid"]

@@ -6,10 +6,11 @@ import numpy as np
 import pytest
 
 from repro.core.executor import evaluate
-from repro.serve import (FrameRequest, FrameServer, MicroBatcher,
-                         ServeConfig, device_put_batch, frame_sharding,
-                         frame_signature, pad_frames, split_frames,
-                         stack_frames)
+from repro.serve import (HIGH, LOW, NORMAL, AdmissionController,
+                         FrameRequest, FrameServer, MicroBatcher,
+                         Overloaded, QoSPolicy, ServeConfig, ServeTrace,
+                         device_put_batch, frame_sharding, frame_signature,
+                         pad_frames, split_frames, stack_frames)
 
 
 def _req(app, inputs, t=0.0):
@@ -164,7 +165,7 @@ def test_server_round_trip_bit_exact_two_apps(lowering_cases):
         app = ("convolution", "stereo")[i % 2]   # exercises deadline flushes
         fn = conv_in if app == "convolution" else stereo_in
         frames.append((app, fn(np.random.RandomState(i))))
-    with FrameServer(max_batch=4, max_delay_ms=20.0) as srv:
+    with FrameServer(ServeConfig(max_batch=4, max_delay_ms=20.0)) as srv:
         srv.register(conv, name="convolution")
         srv.register(stereo, name="stereo")
         futs = [(app, inp, srv.submit(inp, app=app)) for app, inp in frames]
@@ -181,7 +182,8 @@ def test_server_round_trip_bit_exact_two_apps(lowering_cases):
 def test_design_serve_entrypoint_and_report(lowering_cases):
     design, inputs_fn = lowering_cases["descriptor"]
     frames = [inputs_fn(np.random.RandomState(i)) for i in range(5)]
-    with design.serve(max_batch=4, max_delay_ms=10.0) as srv:
+    with design.serve(config=ServeConfig(max_batch=4,
+                                         max_delay_ms=10.0)) as srv:
         outs = [f.result(timeout=300) for f in srv.submit_many(frames)]
     for inp, out in zip(frames, outs):
         ref = evaluate(design.out_val, inp)    # tuple-valued output app
@@ -198,7 +200,8 @@ def test_simulate_ingest_prediction_in_stats(lowering_cases):
     in ServeStats next to the observed high-water mark."""
     design, inputs_fn = lowering_cases["convolution"]
     frames = [inputs_fn(np.random.RandomState(i)) for i in range(8)]
-    with design.serve(max_batch=4, max_delay_ms=2.0) as srv:
+    with design.serve(config=ServeConfig(max_batch=4,
+                                         max_delay_ms=2.0)) as srv:
         for f in srv.submit_many(frames):
             f.result(timeout=300)
         res = srv.simulate_ingest(frames=256, seed=1)
@@ -239,7 +242,7 @@ def test_serve_config_validates():
 
 def test_server_submit_unknown_app_raises(lowering_cases):
     design, _ = lowering_cases["pyramid"]
-    with FrameServer(max_batch=2) as srv:
+    with FrameServer(ServeConfig(max_batch=2)) as srv:
         srv.register(design)
         with pytest.raises(KeyError):
             srv.submit({"x": np.zeros((2, 2))}, app="nope")
@@ -271,10 +274,12 @@ def test_multi_device_sharded_serving_bit_exact():
         from repro.apps import BENCH_CASES
         from repro.core import compile_pipeline
         from repro.core.executor import evaluate
+        from repro.serve import ServeConfig
         uf, inputs_fn = BENCH_CASES['flow']()
         d = compile_pipeline(uf)
         frames = [inputs_fn(np.random.RandomState(i)) for i in range(11)]
-        with d.serve(max_batch=8, max_delay_ms=20.0, donate=True) as srv:
+        cfg = ServeConfig(max_batch=8, max_delay_ms=20.0, donate=True)
+        with d.serve(config=cfg) as srv:
             outs = [f.result(timeout=300) for f in srv.submit_many(frames)]
         for fr, o in zip(frames, outs):
             ref = evaluate(d.out_val, fr)
@@ -350,3 +355,341 @@ def test_check_regression_presence_combinations(in_base, in_fresh,
         assert any("MISSING" in r for r in rows)
         missing_side = ("fresh run" if in_base else "committed baseline")
         assert any(missing_side in r for r in rows)
+
+
+def test_check_regression_lower_is_better_metrics():
+    """shed_rate / p99_ms regress on a RISE past the threshold, not a
+    drop; improvements (drops) always pass."""
+    from benchmarks.check_regression import find_regressions
+    base = {"apps": {"control_plane": {"serve": {"shed_rate": 0.25,
+                                                 "p99_ms": 25.0}}}}
+    fresh = {"apps": {"control_plane": {"serve": {"shed_rate": 0.35,
+                                                  "p99_ms": 10.0}}}}
+    rows, bad = find_regressions(
+        base, fresh, threshold=0.25,
+        metrics=("serve.shed_rate", "serve.p99_ms"))
+    assert bad == ["control_plane:serve.shed_rate"]
+    assert any("ceil=" in r for r in rows)
+
+
+# ---- continuous (rolling) batching ----
+
+def test_rolling_take_never_mixes_signatures():
+    """The pull API drains exactly one bucket per take(): no batch ever
+    mixes (app, signature) no matter how interleaved the window is, and
+    the un-taken remainder keeps rolling."""
+    b = MicroBatcher(max_batch=4, max_delay_s=1e9)
+    variants = [("a", (8, 6), np.int64), ("a", (4, 4), np.int64),
+                ("a", (8, 6), np.int32), ("b", (8, 6), np.int64)]
+    for i in range(37):                       # ragged: buckets end partial
+        app, shape, dt = variants[i % 4]
+        b.put(_req(app, _frame(shape, dt, seed=i), t=float(i)), now=float(i))
+    taken = []
+    while b.has_pending():
+        reqs = b.take(now=1e9 + 1, allow_partial=True)
+        assert reqs is not None and 1 <= len(reqs) <= 4
+        assert len({(r.app, r.signature) for r in reqs}) == 1
+        taken.append(reqs)
+    assert sum(len(r) for r in taken) == 37
+    assert b.take(now=1e9 + 1, allow_partial=True) is None
+
+
+def test_rolling_take_tiers_and_remainder():
+    """Selection order: full bucket beats expired beats partial; a partial
+    is only released with allow_partial; an over-full bucket leaves its
+    remainder as the new window head with its deadline re-anchored."""
+    b = MicroBatcher(max_batch=2, max_delay_s=10.0)
+    f = _frame()
+    b.put(_req("full", f, t=5.0), now=5.0)
+    b.put(_req("full", f, t=6.0), now=6.0)    # bucket "full" has 2 == max
+    b.put(_req("old", f, t=0.0), now=0.0)     # expired at now=11
+    b.put(_req("new", f, t=10.9), now=10.9)   # partial, not expired
+    first = b.take(now=11.0)
+    assert [r.app for r in first] == ["full", "full"]
+    second = b.take(now=11.0)                 # deadline tier
+    assert [r.app for r in second] == ["old"]
+    assert b.take(now=11.0) is None           # partial needs allow_partial
+    third = b.take(now=11.0, allow_partial=True)
+    assert [r.app for r in third] == ["new"] and b.topup_flushes == 1
+    # remainder semantics: 3 frames in a max_batch=2 bucket
+    for i in range(3):
+        b.put(_req("r", f, t=20.0 + i), now=20.0 + i)
+    got = b.take(now=21.9, allow_partial=True)
+    assert len(got) == 2 and b.pending == 1
+    rest = b.take(now=22.0, allow_partial=True)
+    assert len(rest) == 1 and rest[0].enqueue_t == 22.0
+
+
+def test_rolling_partial_prefers_priority_then_fullness():
+    b = MicroBatcher(max_batch=8, max_delay_s=1e9)
+    f = _frame()
+    for i in range(3):                        # fuller, but low priority
+        r = _req("lo", f, t=float(i))
+        r.priority = LOW
+        b.put(r, now=float(i))
+    hi = _req("hi", f, t=5.0)
+    hi.priority = HIGH
+    b.put(hi, now=5.0)
+    first = b.take(now=6.0, allow_partial=True)
+    assert [r.app for r in first] == ["hi"]
+    assert [r.app for r in b.take(now=6.0, allow_partial=True)] == ["lo"] * 3
+
+
+def test_continuous_server_drains_partials_without_deadline(lowering_cases):
+    """With a deadline far beyond the test timeout, flush-the-bucket would
+    stall partial buckets forever; continuous batching must pull them as
+    soon as a slot frees and still be bit-exact."""
+    design, inputs_fn = lowering_cases["convolution"]
+    frames = [inputs_fn(np.random.RandomState(i)) for i in range(5)]
+    cfg = ServeConfig(max_batch=4, max_delay_ms=3600 * 1e3, continuous=True)
+    with design.serve(config=cfg) as srv:
+        outs = [f.result(timeout=300) for f in srv.submit_many(frames)]
+        assert srv.stats.topup_flushes > 0
+    for inp, out in zip(frames, outs):
+        assert np.array_equal(np.asarray(out), evaluate(design.out_val, inp))
+
+
+# ---- admission control / load shedding ----
+
+def test_admission_watermarks_and_priority():
+    adm = AdmissionController(max_queue=100)
+    adm.set_policy("app", QoSPolicy(priority="normal"))
+    # below every watermark: all classes admitted
+    for lvl in (HIGH, NORMAL, LOW):
+        assert adm.admit("app", depth=10, now=0.0, priority=lvl) == lvl
+    # above the low watermark (50): low shed, normal/high admitted
+    with pytest.raises(Overloaded) as ei:
+        adm.admit("app", depth=60, now=0.0, priority=LOW)
+    assert ei.value.reason == "queue" and ei.value.priority == LOW
+    assert ei.value.app == "app" and ei.value.depth == 60
+    assert adm.admit("app", depth=60, now=0.0) == NORMAL  # policy default
+    # above the normal watermark (85): only high admitted
+    with pytest.raises(Overloaded):
+        adm.admit("app", depth=90, now=0.0, priority=NORMAL)
+    assert adm.admit("app", depth=90, now=0.0, priority=HIGH) == HIGH
+    # a truly full queue sheds even high (typed error, not a silent stall)
+    with pytest.raises(Overloaded):
+        adm.admit("app", depth=100, now=0.0, priority=HIGH)
+    st = adm.stats["app"]
+    assert st.admitted == 5 and st.shed_queue == 3 and st.shed_rate == 0
+    assert adm.total_shed() == 3
+    assert any("admission[app]" in ln for ln in adm.report_lines())
+
+
+def test_admission_token_bucket_rate_cap():
+    adm = AdmissionController(max_queue=100)
+    adm.set_policy("capped", QoSPolicy(priority="low", rate_fps=10.0,
+                                       burst=2))
+    assert adm.admit("capped", 0, now=0.0) == LOW
+    assert adm.admit("capped", 0, now=0.0) == LOW    # burst slack
+    with pytest.raises(Overloaded) as ei:
+        adm.admit("capped", 0, now=0.0)              # bucket empty
+    assert ei.value.reason == "rate"
+    # tokens regenerate at rate_fps: admitted again 0.1s later
+    assert adm.admit("capped", 0, now=0.1) == LOW
+    assert adm.stats["capped"].shed_rate == 1
+
+
+def test_qos_policy_validates():
+    with pytest.raises(ValueError):
+        QoSPolicy(priority="urgent")
+    with pytest.raises(ValueError):
+        QoSPolicy(rate_fps=0)
+    with pytest.raises(ValueError):
+        QoSPolicy(burst=0)
+    assert QoSPolicy(priority="high").priority_level == HIGH
+
+
+def test_live_server_sheds_low_priority_with_typed_error(lowering_cases):
+    """A rate-capped app sheds excess submissions with Overloaded while
+    admitted frames complete bit-exact; counters land in stats/health."""
+    design, inputs_fn = lowering_cases["convolution"]
+    frames = [inputs_fn(np.random.RandomState(i)) for i in range(6)]
+    srv = FrameServer(ServeConfig(max_batch=4, max_delay_ms=10.0))
+    srv.register(design, name="conv", backend="jax",
+                 warm_inputs=[frames[0]],
+                 policy=QoSPolicy(priority="low", rate_fps=1e-3, burst=2))
+    with srv:
+        futs, shed = [], []
+        for inp in frames:                    # back-to-back: no regen time
+            try:
+                futs.append((inp, srv.submit(inp, app="conv")))
+            except Overloaded as e:
+                shed.append(e)
+        outs = [(inp, f.result(timeout=300)) for inp, f in futs]
+    assert len(futs) == 2 and len(shed) == 4  # burst=2 admitted, rest shed
+    for e in shed:
+        assert e.app == "conv" and e.reason == "rate" and e.priority == LOW
+    for inp, out in outs:
+        assert np.array_equal(np.asarray(out), evaluate(design.out_val, inp))
+    assert srv.stats.shed == 4
+    assert srv.admission.stats["conv"].shed_rate == 4
+    assert any("shed=4" in ln for ln in srv.health.report_lines())
+
+
+# ---- warmup-before-traffic ----
+
+def test_warmup_compiles_every_bucket_before_traffic(lowering_cases):
+    """start() pre-compiles every (signature, pow2-batch) bucket of the
+    registered warm inputs; live traffic then adds no new jit entries."""
+    design, inputs_fn = lowering_cases["stereo"]
+    warm = inputs_fn(np.random.RandomState(0))
+    srv = FrameServer(ServeConfig(max_batch=4))
+    srv.register(design, name="stereo", backend="jax", warm_inputs=[warm])
+    assert srv.stats.warmup_done == 0
+    srv.start()
+    try:
+        # pow2 buckets for max_batch=4: sizes 1, 2, 4
+        assert srv.stats.warmup_total == 3
+        assert srv.stats.warmup_done == 3
+        assert srv.stats.warmup_s > 0
+        assert srv.health.ready
+        lp = srv._apps["stereo"].compiled
+        keys_before = {k for k in lp.signatures if k[0] == "serve"}
+        assert keys_before, "warmup left no serve-mode jit entries"
+        frames = [inputs_fn(np.random.RandomState(i)) for i in range(7)]
+        for f in srv.submit_many(frames):
+            f.result(timeout=300)
+        keys_after = {k for k in lp.signatures if k[0] == "serve"}
+        assert keys_after == keys_before  # traffic compiled nothing new
+        assert any("warmup: 3/3" in ln for ln in srv.stats.report_lines())
+    finally:
+        srv.close()
+
+
+def test_no_warmup_config_skips_precompile(lowering_cases):
+    design, _ = lowering_cases["convolution"]
+    srv = FrameServer(ServeConfig(warmup=False))
+    srv.register(design, name="conv", backend="jax",
+                 warm_inputs=[{"convolution.in": np.zeros((8, 8),
+                                                          np.int64)}])
+    with srv:
+        assert srv.stats.warmup_done == 0 and srv.stats.warmup_total == 0
+
+
+# ---- trace capture / replay ----
+
+def test_trace_roundtrip_and_scaling(tmp_path):
+    tr = ServeTrace()
+    for i, (app, pri) in enumerate([("a", HIGH), ("b", LOW), ("a", NORMAL)]):
+        tr.record(0.5 * i, app, pri)
+    p = str(tmp_path / "trace.json")
+    tr.save(p)
+    back = ServeTrace.load(p)
+    assert [(e.t, e.app, e.priority) for e in back.events] == \
+        [(e.t, e.app, e.priority) for e in tr.events]
+    assert back.mean_gap_s() == pytest.approx(0.5)
+    fast = back.scaled(4)
+    assert fast.mean_gap_s() == pytest.approx(0.125)
+    assert [e.app for e in fast.events] == ["a", "b", "a"]
+    # cycle mapping: mean gap lands exactly on mean_gap_cycles
+    cyc = back.arrival_cycles(mean_gap_cycles=64.0)
+    assert list(cyc) == [0, 64, 128]
+
+
+def test_replay_ingest_burst_vs_spread():
+    """Measured burstiness matters: the same frame count arriving as one
+    burst marks the ingest FIFO far higher than evenly spread arrivals —
+    the information a Poisson mean would wash out."""
+    from fractions import Fraction
+
+    from repro.hwsim import replay_ingest
+    spread = replay_ingest(np.arange(32) * 16, Fraction(1, 8), capacity=64)
+    burst = replay_ingest(np.zeros(32, np.int64), Fraction(1, 8),
+                          capacity=64)
+    assert spread.completed and burst.completed
+    assert burst.source == "trace"
+    assert burst.hwm > spread.hwm
+    assert burst.hwm >= 24                 # nearly the whole burst resident
+    # deterministic: identical inputs, identical marks
+    again = replay_ingest(np.zeros(32, np.int64), Fraction(1, 8),
+                          capacity=64)
+    assert (again.hwm, again.cycles) == (burst.hwm, burst.cycles)
+
+
+def test_server_records_trace_and_replays_through_ingest(lowering_cases):
+    design, inputs_fn = lowering_cases["convolution"]
+    frames = [inputs_fn(np.random.RandomState(i)) for i in range(8)]
+    cfg = ServeConfig(max_batch=4, max_delay_ms=5.0)
+    with design.serve(config=cfg) as srv:
+        for f in srv.submit_many(frames):
+            f.result(timeout=300)
+        assert len(srv.trace) == 8
+        assert all(e.app for e in srv.trace.events)
+        res = srv.replay_trace_ingest(service_fps=400.0)
+        assert res.source == "trace" and res.completed
+        assert srv.stats.predicted_queue_hw == res.hwm
+        # deterministic for a fixed trace + explicit service rate
+        res2 = srv.replay_trace_ingest(service_fps=400.0)
+        assert (res2.hwm, res2.cycles) == (res.hwm, res.cycles)
+    with pytest.raises(ValueError):
+        FrameServer(ServeConfig()).replay_trace_ingest(trace=ServeTrace())
+
+
+# ---- typed options API ----
+
+def test_frame_server_loose_kwargs_deprecated():
+    with pytest.warns(DeprecationWarning):
+        srv = FrameServer(max_batch=2)
+    assert srv.config.max_batch == 2
+    with pytest.raises(TypeError):
+        FrameServer(ServeConfig(), max_batch=2)
+    with pytest.raises(TypeError):
+        ServeConfig(max_bach=2)               # typo: typed config catches it
+
+
+def test_design_serve_loose_kwargs_deprecated(lowering_cases):
+    design, inputs_fn = lowering_cases["convolution"]
+    with pytest.warns(DeprecationWarning):
+        srv = design.serve(max_batch=2)
+    try:
+        assert srv.config.max_batch == 2
+    finally:
+        srv.close()
+    with pytest.raises(TypeError):
+        design.serve(config=ServeConfig(), max_batch=2)
+
+
+def test_serve_numpy_backend_swap_noted():
+    """serve() on a numpy-backend design serves through jax — and says so
+    in design.notes / ServeStats instead of swapping silently."""
+    from repro.apps import BENCH_CASES
+    from repro.core import compile_pipeline
+    uf, inputs_fn = BENCH_CASES["convolution"]()
+    design = compile_pipeline(uf)                # fresh: fixture is shared
+    assert design.backend == "numpy"
+    notes_before = list(design.notes)
+    with design.serve(config=ServeConfig(max_batch=2)) as srv:
+        f = srv.submit(inputs_fn(np.random.RandomState(0)))
+        f.result(timeout=300)
+        assert srv.stats.backend == "jax"
+    note = [n for n in design.notes if "swapped to 'jax'" in n]
+    assert len(note) == 1
+    assert any("backend=jax" in ln for ln in srv.stats.report_lines())
+    # idempotent: a second serve() does not duplicate the note
+    with design.serve(config=ServeConfig(max_batch=2)):
+        pass
+    assert design.notes.count(note[0]) == 1
+    assert note[0] not in notes_before
+
+
+def test_rolling_partial_hold_window():
+    """A partial bucket is top-up eligible only after partial_hold_s —
+    the batching window that keeps burst arrivals from shattering into
+    singleton batches; full and deadline-expired buckets are unaffected."""
+    b = MicroBatcher(max_batch=4, max_delay_s=10.0)
+    f = _frame()
+    b.put(_req("a", f, t=100.0), now=100.0)
+    assert b.take(now=100.001, allow_partial=True,
+                  partial_hold_s=0.002) is None      # 1ms < 2ms hold
+    assert b.next_topup_ready(0.002) == pytest.approx(100.002)
+    got = b.take(now=100.0021, allow_partial=True, partial_hold_s=0.002)
+    assert [r.app for r in got] == ["a"] and b.topup_flushes == 1
+    # a full bucket ignores the hold entirely
+    for i in range(4):
+        b.put(_req("b", f, t=200.0), now=200.0)
+    assert len(b.take(now=200.0, allow_partial=True,
+                      partial_hold_s=9.0)) == 4
+    # so does a deadline-expired one
+    b.put(_req("c", f, t=300.0), now=300.0)
+    assert b.take(now=310.0, partial_hold_s=9e9) is not None

@@ -5,7 +5,7 @@ import pytest
 from fractions import Fraction
 
 from repro.apps import Convolution, Stereo, golden_convolution
-from repro.core import compile_pipeline
+from repro.core import CompileOptions, compile_pipeline
 
 
 # paper fig. 9: CONVOLUTION at each throughput -> (T_eff, cycles)
@@ -46,8 +46,9 @@ def test_auto_fifo_overhead_vs_manual(conv_design_t1):
     manual allocation (DMA absorbs pad/crop bursts); compute cost is the
     same."""
     auto = conv_design_t1
-    manual = compile_pipeline(Convolution(), T=Fraction(1),
-                              manual_fifo_overrides={"crop": 0, "pad": 0})
+    manual = compile_pipeline(
+        Convolution(), T=Fraction(1),
+        options=CompileOptions(manual_fifo_overrides={"crop": 0, "pad": 0}))
     assert auto.resources.brams > manual.resources.brams
     assert auto.resources.brams <= 4 * manual.resources.brams
     assert abs(auto.resources.clbs - manual.resources.clbs) < 32
@@ -73,5 +74,47 @@ def test_solver_modes_agree(conv_design_t1):
     """Z3 and LP both solve register minimization exactly -> equal totals.
     (conv_design_t1 compiled with the default "z3" solver, which falls
     back to the exact LP when z3-solver is not installed.)"""
-    b = compile_pipeline(Convolution(), T=Fraction(1), fifo_solver="lp")
+    b = compile_pipeline(Convolution(), T=Fraction(1),
+                         options=CompileOptions(fifo_solver="lp"))
     assert conv_design_t1.fifo.total_bits == b.fifo.total_bits
+
+
+# ---- typed options API (CompileOptions / SimOptions) ----
+
+def test_compile_options_deprecated_kwargs_equivalent():
+    """Loose compile_pipeline kwargs still work behind a
+    DeprecationWarning and produce the same design as CompileOptions;
+    mixing both is a TypeError; typos fail fast on the dataclass."""
+    with pytest.warns(DeprecationWarning, match="compile_pipeline"):
+        old = compile_pipeline(Convolution(), T=Fraction(1),
+                               fifo_solver="lp")
+    new = compile_pipeline(Convolution(), T=Fraction(1),
+                           options=CompileOptions(fifo_solver="lp"))
+    assert old.fifo.total_bits == new.fifo.total_bits
+    assert old.report() == new.report()
+    with pytest.raises(TypeError, match="both"):
+        compile_pipeline(Convolution(),
+                         options=CompileOptions(fifo_solver="lp"),
+                         fifo_solver="lp")
+    with pytest.raises(TypeError):
+        CompileOptions(fifo_slover="lp")      # typo: typed options catch it
+
+
+def test_sim_options_deprecated_kwargs_equivalent(conv_design_t1):
+    from repro.core import SimOptions
+    with pytest.warns(DeprecationWarning, match="HWDesign.simulate"):
+        old = conv_design_t1.simulate(frames=2, engine="vector")
+    new = conv_design_t1.simulate(options=SimOptions(frames=2,
+                                                     engine="vector"))
+    assert (old.cycles, old.sink_tokens) == (new.cycles, new.sink_tokens)
+    assert old.hwm_by_key() == new.hwm_by_key()
+    with pytest.raises(TypeError, match="both"):
+        conv_design_t1.simulate(options=SimOptions(frames=2), frames=2)
+
+
+def test_optimize_fifos_options(conv_design_t1):
+    from repro.core import SimOptions
+    with pytest.warns(DeprecationWarning, match="optimize_fifos"):
+        old = conv_design_t1.optimize_fifos(frames=2)
+    new = conv_design_t1.optimize_fifos(options=SimOptions(frames=2))
+    assert old == new
