@@ -44,8 +44,12 @@ _memo = None
 def _time_engines(design) -> Dict[str, object]:
     """Scalar wall time vs warm vectorized wall time on one design, with
     the equivalence verdict (SimResult.edge_signature is the shared
-    definition of bit-identical)."""
+    definition of bit-identical).  The vectorized engine runs with
+    event-jump batching on (the default) and the gate additionally
+    cross-checks a jump-off run, so a jump that lands on the wrong cycle
+    or corrupts the launch ring fails ``engines_equal``."""
     from repro.hwsim.sim import simulate
+    from repro.hwsim.vector import VectorSim
     t0 = time.time()
     scalar = simulate(design, engine="scalar")
     t_scalar = time.time() - t0
@@ -53,14 +57,20 @@ def _time_engines(design) -> Dict[str, object]:
     t0 = time.time()
     vector = simulate(design, engine="vector")
     t_vector = max(time.time() - t0, 1e-9)
+    depths = dict(design.fifo.depth) if design.fifo else {}
+    nojump = VectorSim(design.modules, design.edges,
+                       depths).run(event_jump=False)
+    sig = scalar.edge_signature()
     return {
         "cycles": scalar.cycles,
         "engines_equal": (scalar.cycles == vector.cycles
-                          and scalar.edge_signature()
-                          == vector.edge_signature()),
+                          == nojump.cycles
+                          and sig == vector.edge_signature()
+                          == nojump.edge_signature()),
         "scalar_wall_s": round(t_scalar, 3),
         "vector_wall_s": round(t_vector, 4),
         "speedup": round(t_scalar / t_vector, 1),
+        "cycles_skipped": vector.cycles_skipped,
     }
 
 
@@ -97,6 +107,7 @@ def bench_hwsim() -> Dict[str, dict]:
             "sim_wall_scalar_s": timing["scalar_wall_s"],
             "sim_wall_vector_s": timing["vector_wall_s"],
             "sim_speedup_vector_vs_scalar": timing["speedup"],
+            "sim_cycles_skipped": timing["cycles_skipped"],
             "steady_frames": STEADY_FRAMES,
             "steady_proven": steady.proven,
             "fifo_bits_steady": steady.total_bits(
@@ -229,7 +240,8 @@ def report_text() -> str:
             f"hand {d['fifo_bits_hand']}, "
             f"narrowed {d.get('fifo_bits_narrowed', '-')}) "
             f"engines_equal={d['engines_equal']} "
-            f"vector {d['sim_speedup_vector_vs_scalar']}x")
+            f"vector {d['sim_speedup_vector_vs_scalar']}x "
+            f"skipped={d['sim_cycles_skipped']}")
     return "\n".join(lines)
 
 

@@ -53,12 +53,21 @@ MK_METRICS = ("speedup_pallas_vs_numpy", "megakernel.speedup_vs_per_op",
 # floored high-priority p99
 CONTROL_PLANE_METRICS = ("serve.continuous_x_vs_flush", "serve.shed_rate",
                          "serve.p99_ms")
-METRICS = (METRIC, SERVE_METRIC) + MK_METRICS + CONTROL_PLANE_METRICS
+# design-space exploration (bench_explore, the apps[*]["explore"] rows):
+# the auto-vs-hand area answer (a rise means the sweep stopped finding
+# hand-competitive designs) and the evaluation throughput of the
+# population-batched simulator
+EXPLORE_METRICS = ("explore.best_area_ratio", "explore.points_per_sec")
+METRICS = ((METRIC, SERVE_METRIC) + MK_METRICS + CONTROL_PLANE_METRICS
+           + EXPLORE_METRICS)
 
 # metrics where a RISE (not a drop) past the threshold is the regression:
 # shed fraction creeping up means admission got lossier at the same
-# overload; p99 creeping up means the high-priority latency bound eroded
-LOWER_IS_BETTER = {"serve.shed_rate", "serve.p99_ms"}
+# overload; p99 creeping up means the high-priority latency bound eroded;
+# best_area_ratio creeping up means auto designs got more expensive
+# relative to the hand annotation
+LOWER_IS_BETTER = {"serve.shed_rate", "serve.p99_ms",
+                   "explore.best_area_ratio"}
 
 
 def load_baseline(spec: str) -> Dict[str, Any]:

@@ -38,3 +38,13 @@ SIM_CASES = {
     "descriptor": _desc.sim_case,
     "pyramid": _pyr.sim_case,
 }
+
+# per-app design-space axes for the Pareto explorer (repro.explore):
+# throughput-target ladder, schedule solvers, and FIFO-depth variant knobs
+EXPLORE_SPACES = {
+    "convolution": _conv.EXPLORE,
+    "stereo": _stereo.EXPLORE,
+    "flow": _flow.EXPLORE,
+    "descriptor": _desc.EXPLORE,
+    "pyramid": _pyr.EXPLORE,
+}

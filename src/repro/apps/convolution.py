@@ -71,6 +71,14 @@ def bench_case(w: int = 96, h: int = 40):
 # border modules (the AXI memory system absorbs their bursts)
 HAND_FIFO = {"pad": 0, "crop": 0}
 
+# design-space axes for repro.explore
+EXPLORE = {
+    "t_ladder": ("1", "1/2", "1/4"),
+    "solvers": ("lp", "asap"),
+    "scales": (0.5, 0.75, 1.25),
+    "jitter": 4,
+}
+
 
 def sim_case(w: int = 96, h: int = 40):
     """Small instance + target throughput + hand FIFO annotations: the

@@ -45,6 +45,16 @@ def bench_case(w: int = 96, h: int = 64, levels: int = 2):
 # reasoning as convolution's pad/crop)
 HAND_FIFO = {"downsample": 0}
 
+# design-space axes for repro.explore: PYRAMID's analytic depths already
+# under-provision the reconvergent diamond (scaled-down variants deadlock,
+# which the sweep should see), so the scale axis leans upward
+EXPLORE = {
+    "t_ladder": ("1", "1/2"),
+    "solvers": ("lp", "asap"),
+    "scales": (0.75, 1.25, 1.5),
+    "jitter": 4,
+}
+
 
 def sim_case(w: int = 64, h: int = 32, levels: int = 2):
     """Small instance + target throughput + hand FIFO annotations for the

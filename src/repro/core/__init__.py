@@ -11,8 +11,8 @@ Public surface:
   lowering — automatic HWImg -> JAX/Pallas lowering (software §5.2 analog)
   compile  — end-to-end compile driver; typed CompileOptions / SimOptions
 """
-from .compile import (CompileOptions, HWDesign, SimOptions,  # noqa: F401
-                      compile_pipeline)
+from .compile import (CompileOptions, ExploreOptions, HWDesign,  # noqa: F401
+                      SimOptions, compile_pipeline)
 from .dtypes import (Array2d, ArrayT, Bits, Bool, Float, Int, SparseT,  # noqa
                      TupleT, UInt)
 from .hwimg import (Abs, AbsDiff, Add, AddAsync, AddMSBs, And, ArgMin,  # noqa

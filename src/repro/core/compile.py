@@ -96,6 +96,62 @@ class SimOptions:
             raise ValueError("frames must be >= 1")
 
 
+@dataclass(frozen=True)
+class ExploreOptions:
+    """Typed option bundle for ``HWDesign.explore()`` /
+    ``repro.explore.explore_design`` — the design-space exploration
+    engine (area-vs-throughput Pareto sweep over the cycle simulator).
+
+    Budgets: ``budget_s`` stops the sweep on wall-clock (the first
+    evaluation batch always runs); ``max_points`` caps the candidate list
+    deterministically (use it — not ``budget_s`` — when reproducible
+    fronts matter, e.g. the seeded-determinism test). ``seed`` drives the
+    randomized FIFO-depth variants. Sweep axes default to the app's
+    registered ``EXPLORE_SPACE`` (``repro.apps.EXPLORE_SPACES``) and can
+    be overridden here: ``t_ladder`` (throughput targets, each recompiled
+    through ``rigel.optimize_lanes``; strings like "1/2" or Fractions),
+    ``solvers`` (schedule variants: "z3"/"lp" optimal vs "asap" earliest-
+    start), ``scales`` (analytic-depth scale factors), ``jitter`` (count
+    of seeded per-edge random depth variants per netlist).  ``engine``
+    selects the evaluation path: "population" (batched kernel, the fast
+    path), "vector" (serial vectorized runs), or "scalar" (the reference
+    Python loop — the baseline the points/sec speedup is measured
+    against)."""
+    budget_s: Optional[float] = None
+    max_points: Optional[int] = None
+    seed: int = 0
+    frames: int = 2
+    max_cycles: Optional[int] = None
+    population: int = 16
+    t_ladder: Optional[Tuple[Any, ...]] = None
+    solvers: Optional[Tuple[str, ...]] = None
+    scales: Optional[Tuple[float, ...]] = None
+    jitter: Optional[int] = None
+    throughput_tol: float = 0.02
+    engine: str = "population"
+
+    def __post_init__(self):
+        if self.engine not in ("population", "vector", "scalar"):
+            raise ValueError(f"unknown explore engine {self.engine!r} "
+                             "(want population, vector, or scalar)")
+        if self.frames < 1:
+            raise ValueError("frames must be >= 1")
+        if self.population < 1:
+            raise ValueError("population must be >= 1")
+        if self.budget_s is not None and self.budget_s <= 0:
+            raise ValueError("budget_s must be positive")
+        if self.max_points is not None and self.max_points < 1:
+            raise ValueError("max_points must be >= 1")
+        if self.jitter is not None and self.jitter < 0:
+            raise ValueError("jitter must be >= 0")
+        if self.throughput_tol < 0:
+            raise ValueError("throughput_tol must be >= 0")
+        for s in self.solvers or ():
+            if s not in ("z3", "lp", "asap"):
+                raise ValueError(f"unknown explore solver {s!r} "
+                                 "(want z3, lp, or asap)")
+
+
 _UNSET = object()
 
 
@@ -138,6 +194,11 @@ class HWDesign:
     # whether the shrink re-verified (False = reverted to analytic depths)
     fifo_analytic: Optional[Dict[Tuple[int, int], int]] = None
     fifo_sim_proven: Optional[bool] = None
+    # the UserFunction this design was compiled from and the T the caller
+    # requested (before SDF normalization) — kept so explore() can
+    # recompile the same pipeline at other throughput targets
+    _uf: Optional[UserFunction] = field(default=None, repr=False)
+    _t_request: Optional[Fraction] = field(default=None, repr=False)
     _lowered: Dict[str, Any] = field(default_factory=dict, repr=False)
     _serve_stats: List[Any] = field(default_factory=list, repr=False)
     _hwsim: List[Any] = field(default_factory=list, repr=False)
@@ -257,6 +318,19 @@ class HWDesign:
                             backend=backend)
         self._verify[:] = [res]
         return res
+
+    def explore(self, options: Optional["ExploreOptions"] = None):
+        """Design-space exploration (repro/explore): sweep throughput
+        targets (lane counts via ``rigel.optimize_lanes``), FIFO depth
+        policies (analytic / sim-proven / scaled / seeded-random), and
+        schedule solver variants; evaluate every candidate with the
+        population-batched cycle engine plus the hwsim area model; return
+        an ``ExploreResult`` whose ``front`` is the area-vs-throughput
+        Pareto front with the app's hand-annotated design overlaid.
+        Requires a design produced by :func:`compile_pipeline` (the
+        pipeline is recompiled per throughput target)."""
+        from ..explore import explore_design  # lazy, like serve/lower
+        return explore_design(self, options or ExploreOptions())
 
     def lower(self, backend: Optional[str] = None, debug: bool = False,
               megakernel: str = "auto", per_node: bool = False):
@@ -593,6 +667,8 @@ def compile_pipeline(uf: UserFunction, T: Fraction = Fraction(1),
     design = HWDesign(uf.name, T_eff, kind, modules, edges, fifo, out_mod,
                       out_sched.tokens_per_frame, inp, out, notes,
                       backend=backend)
+    design._uf = uf
+    design._t_request = T
     if sim_solver:
         # measured-not-bounded FIFO sizing (§7.3): simulate, shrink to the
         # steady-state high-water marks, prove, install

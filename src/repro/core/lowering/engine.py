@@ -513,7 +513,10 @@ class CompiledPipeline:
     # ---- reporting ----
     def megakernel_stats(self) -> Dict[str, Any]:
         """Per-pipeline megakernel roll-up (bench rows + regression gate):
-        segment counts, fused-node total, and VMEM line-buffer bytes."""
+        segment counts, fused-node total, VMEM line-buffer bytes, and a
+        per-segment roofline table (scalar ops vs kernel-boundary bytes —
+        arithmetic intensity shows which segments fusion actually feeds
+        and which are bandwidth-bound data movement)."""
         return {
             "segments": len(self.megakernels),
             "total_segments": len(self._plan),
@@ -521,6 +524,12 @@ class CompiledPipeline:
             "linebuf_bytes": sum(m.linebuf_bytes
                                  for m in self.megakernels),
             "float_nodes": sum(m.float_nodes for m in self.megakernels),
+            "rooflines": [
+                {"segment": m.name, "flops": m.flops,
+                 "io_bytes": m.io_bytes,
+                 "arithmetic_intensity":
+                     round(m.arithmetic_intensity, 4)}
+                for m in self.megakernels],
         }
 
     def cache_stats(self) -> List[str]:

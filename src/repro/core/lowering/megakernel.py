@@ -327,6 +327,15 @@ class Megakernel:
     float_nodes: int                    # nodes under the ULP tier
     n_winsum: int = 0                   # box-sum chains -> reduce_window
     note: str = ""
+    flops: int = 0                      # scalar ops per frame (int ops too)
+    io_bytes: int = 0                   # kernel-boundary bytes per frame
+
+    @property
+    def arithmetic_intensity(self) -> float:
+        """Roofline x-axis: scalar ops per byte crossing the kernel
+        boundary.  High intensity = fusion is paying (work stays in
+        VMEM); near zero = the segment is bandwidth-bound movement."""
+        return self.flops / self.io_bytes if self.io_bytes else 0.0
 
     def report_line(self) -> str:
         tier = (f"float tier (ULP<={FLOAT_ULP_BOUND})" if self.float_nodes
@@ -457,6 +466,29 @@ def emit_megakernel(ir: LoweringIR, nodes: List[IRNode],
                 linebuf += nbytes((d.size,) + tuple(shape[1:]),
                                   _carrier_dtype(ty))
 
+    # ---- roofline accounting (per frame) ----
+    # flops counts scalar arithmetic ops (integer ops included at weight
+    # 1): Map = one op per output scalar, Reduce/ReducePatch = one op per
+    # input scalar (the add/cmp tree), fused box-sum chains = window size
+    # per output scalar; geometry ops (Stencil/Pad/Crop/resample) move
+    # data, 0 ops.  io_bytes is traffic across the kernel boundary —
+    # operand frames in, materialized outputs out — i.e. what must cross
+    # HBM<->VMEM when the segment streams.
+    def _scalars(ty) -> int:
+        return sum(math.prod(type_shape(t)) for t in _elems(ty))
+
+    flops = 0
+    for n in nodes:
+        if n.uid in skip:
+            continue
+        if n.uid in winsum:
+            _l, _b, sh, sw = _winsum_geometry(winsum[n.uid])
+            flops += sh * sw * _scalars(n.ty)
+        elif n.op == "Map":
+            flops += _scalars(n.ty)
+        elif n.op in ("Reduce", "ReducePatch"):
+            flops += _scalars(n.input_tys[0])
+
     # ---- output layout: one pallas output per image leaf ----
     out_layout = []                     # (uid, elem_idx|None, shape, dtype)
     for o in out_nodes:
@@ -471,6 +503,13 @@ def emit_megakernel(ir: LoweringIR, nodes: List[IRNode],
                   for n in nodes if n.op == "Const"]
     node_list = [n for n in nodes if n.op != "Const"]
     in_list = list(in_uids)
+
+    io_bytes = (
+        sum(nbytes(type_shape(t), _carrier_dtype(t))
+            for u in in_list for t in _elems(ir.nodes[u].ty))
+        + sum(nbytes(type_shape(t), _carrier_dtype(t))
+              for _u, _v, t in const_list)
+        + sum(nbytes(s, dt) for _u, _k, s, dt in out_layout))
     leaf_is_tuple = {u: isinstance(ir.nodes[u].ty, TupleT) for u in in_list}
 
     def apply(*leaf_vals):
@@ -576,7 +615,7 @@ def emit_megakernel(ir: LoweringIR, nodes: List[IRNode],
             f"(grid={grid} blocks x {block} rows)")
     return Megakernel(name, apply, len(node_list), len(in_list), block,
                       grid, linebuf, whole_b, float_nodes, len(winsum),
-                      note)
+                      note, flops=flops, io_bytes=io_bytes)
 
 
 def _winsum_geometry(stn: IRNode):

@@ -23,3 +23,11 @@ from .occupancy import EdgeOccupancy, OccupancyTrace  # noqa: F401
 from .sim import (CycleSim, NeedSpec, PROFILED, SimResult,  # noqa: F401
                   UNEXERCISED_BURSTY, build_sim, need_spec, simulate)
 from .vector import VectorSim  # noqa: F401
+
+
+def __getattr__(name):
+    # lazy: population batching is only used by repro.explore sweeps
+    if name == "PopulationSim":
+        from .population import PopulationSim
+        return PopulationSim
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -125,7 +125,11 @@ class SimResult:
     throughput, per-FIFO occupancy high-water marks (steady-state marks when
     ``frames > 1``), and a deadlock diagnosis (None = completed).
     ``frame_ends[i]`` is the cycle during which the sink absorbed frame i's
-    last token; ``engine`` names the engine that produced the result."""
+    last token; ``engine`` names the engine that produced the result.
+    ``cycles_skipped`` counts cycles the vector engine fast-forwarded over
+    stall plateaus (event-jump batching) — they are included in ``cycles``
+    and deliberately NOT part of ``edge_signature``, which must be identical
+    whether or not the engine jumped."""
 
     cycles: int
     sink_tokens: int
@@ -134,6 +138,7 @@ class SimResult:
     frames: int = 1
     frame_ends: List[int] = field(default_factory=list)
     engine: str = "scalar"
+    cycles_skipped: int = 0
 
     @property
     def completed(self) -> bool:

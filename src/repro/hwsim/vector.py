@@ -181,6 +181,7 @@ class VectorSim:
             credit=np.zeros(self.M, i64),
             hist=np.zeros((self.H, self.M), i64),
             hwm=np.zeros(self.E, i64), hwm_cycle=np.zeros(self.E, i64),
+            pflag=i64(1), skipped=i64(0),
         )
 
     # -- one cycle, numpy (the jit body is a transcription of this) -----
@@ -224,7 +225,76 @@ class VectorSim:
         s["t"] = t + 1
         return bool(can_push.any() or pop.any() or launch.any())
 
-    def _run_numpy(self, horizon: int, stall_limit: int
+    # -- event-jump batching -------------------------------------------
+    # During a stall plateau (a cycle with no token movement) the only
+    # state that evolves is the cycle counter, the launch-history ring
+    # (rewriting unchanged counts), and the throttle credit buckets
+    # (min(credit + rnum, rden) per cycle).  Every enabling condition —
+    # blocked, ready, pop eligibility — is therefore static until one of
+    # exactly two event kinds fires:
+    #
+    #   * maturation: a non-blocked producer with pushed < launched becomes
+    #     pushable at the first future cycle x where the ring row
+    #     (x - leff) % H exceeds its push count.  Guaranteed within
+    #     leff - 1 cycles: cycle t-1's row holds `launched` > pushed.
+    #   * credit refill: a ready throttled module launches once its bucket
+    #     reaches rden; credit after d no-op cycles is the closed form
+    #     min(credit + d*rnum, rden), so the launch lands at
+    #     d = max(0, ceil((rden - credit) / rnum) - 1).
+    #
+    # Jumping to the earliest such event (clamped to the stall-detect and
+    # horizon boundaries so reported cycle counts stay bit-identical) and
+    # backfilling the skipped ring rows reproduces per-cycle execution
+    # exactly — verified by the engines-equal signature gate.
+    def _next_event_numpy(self, s: dict) -> int:
+        t = int(s["t"])
+        te = int(_INF)
+        full = s["occ"] >= self.cap
+        blocked = (self.out_adj @ full.astype(np.int64)) > 0
+        cand = self.active & self.has_out & ~blocked \
+            & (s["pushed"] < s["launched"])
+        for j in np.flatnonzero(cand):
+            leff_j = int(self.leff[j])
+            pj = int(s["pushed"][j])
+            for d in range(leff_j):
+                if int(s["hist"][(t + d - leff_j) % self.H, j]) > pj:
+                    te = min(te, t + d)
+                    break
+        need = s["fr"] * self.tpf \
+            + self.need_buf[self.need_off + s["kf"] - 1]
+        done_dst = s["fr"] >= self.frames
+        unmet = (s["consumed"] < need) & ~done_dst
+        ready = (self.in_adj @ unmet.astype(np.int64)) == 0
+        done_m = s["launched"] >= self.tot
+        cred = self.throt & ready & ~done_m & self.active
+        for j in np.flatnonzero(cred):
+            gap = int(self.rden[j]) - int(s["credit"][j])
+            d = max(0, -(-gap // int(self.rnum[j])) - 1)
+            te = min(te, t + d)
+        return te
+
+    def _jump_numpy(self, s: dict, horizon: int, stall_limit: int) -> None:
+        t = int(s["t"])
+        te = min(self._next_event_numpy(s),
+                 int(s["last_progress"]) + stall_limit + 1, horizon)
+        te = max(te, t)
+        dt = te - t
+        if dt == 0:
+            return
+        # ring slot r's most recent cycle <= te-1; rows belonging to the
+        # skipped cycles [t, te-1] are rewritten with the frozen counts
+        r = np.arange(self.H)
+        x_r = (te - 1) - ((te - 1 - r) % self.H)
+        s["hist"][x_r >= t] = s["launched"]
+        s["credit"] = np.where(
+            self.throt,
+            np.minimum(s["credit"] + dt * self.rnum, self.rden),
+            s["credit"])
+        s["t"] = np.int64(te)
+        s["skipped"] = np.int64(int(s["skipped"]) + dt)
+
+    def _run_numpy(self, horizon: int, stall_limit: int,
+                   event_jump: bool = True
                    ) -> Tuple[dict, List[int], Optional[int]]:
         s = self._initial_state()
         frame_ends: List[int] = []
@@ -241,6 +311,10 @@ class VectorSim:
                 break
             if self._step_numpy(s):
                 s["last_progress"] = s["t"] - 1
+            elif event_jump:
+                # skipped cycles have no movement, so the frame-boundary
+                # bookkeeping below cannot be crossed by a jump
+                self._jump_numpy(s, horizon, stall_limit)
             if self.sink0 >= 0 and self.frame_tokens:
                 while (len(frame_ends) <
                        s["launched"][self.sink0] // self.frame_tokens):
@@ -258,7 +332,8 @@ class VectorSim:
                 as_j(self.in_adj), as_j(self.need_buf), as_j(self.need_off),
                 as_j(self.tpf), as_j(self.ot))
 
-    def _run_jit(self, horizon: int, stall_limit: int
+    def _run_jit(self, horizon: int, stall_limit: int,
+                 event_jump: bool = True
                  ) -> Tuple[dict, List[int], Optional[int]]:
         import jax
         from jax.experimental import enable_x64
@@ -277,7 +352,7 @@ class VectorSim:
                 if self.sink0 >= 0 and self.frame_tokens else []
             args = (np.int64(self.frames), np.int64(self.H),
                     np.int64(horizon), np.int64(stall_limit),
-                    np.int64(self.sink0))
+                    np.int64(self.sink0), np.int64(1 if event_jump else 0))
             t_i = _STATE_KEYS.index("t")
             launched_i = _STATE_KEYS.index("launched")
             for target in targets:
@@ -309,7 +384,11 @@ class VectorSim:
             return s, frame_ends, code
 
     # -- diagnosis (stalled runs) --------------------------------------
-    def _diagnose(self, s: dict) -> str:
+    def _diagnose(self, s: dict, cap: Optional[np.ndarray] = None) -> str:
+        """``cap`` overrides the per-edge capacities (PopulationSim runs
+        many capacity vectors over this one packed netlist)."""
+        if cap is None:
+            cap = self.cap
         why = []
         need = s["fr"] * self.tpf \
             + self.need_buf[self.need_off + s["kf"] - 1]
@@ -324,7 +403,7 @@ class VectorSim:
                        and s["consumed"][e] < need[e] and s["occ"][e] == 0]
             full = [self.keys[e] for e in np.flatnonzero(self.src == m)
                     if inflight[m] > 0 and not self.unbounded
-                    and s["occ"][e] >= self.cap[e]]
+                    and s["occ"][e] >= cap[e]]
             if starved or full:
                 why.append(f"{self.names[m]}[{m}]"
                            + (f" starved on {starved}" if starved else "")
@@ -333,12 +412,14 @@ class VectorSim:
 
     # -- entry ----------------------------------------------------------
     def run(self, max_cycles: Optional[int] = None,
-            jit: Optional[bool] = None) -> SimResult:
+            jit: Optional[bool] = None,
+            event_jump: bool = True) -> SimResult:
         horizon = max_cycles or self._default_horizon()
         stall_limit = self._stall_limit()
         use_jit = _has_jax() if jit is None else jit
         runner = self._run_jit if use_jit else self._run_numpy
-        s, frame_ends, code = runner(horizon, stall_limit)
+        s, frame_ends, code = runner(horizon, stall_limit,
+                                     event_jump=event_jump)
         t = int(s["t"])
         deadlock = None
         if code == _HORIZON:
@@ -360,19 +441,29 @@ class VectorSim:
         sink_tokens = int(s["launched"][self.is_sink].sum())
         return SimResult(t, sink_tokens, deadlock, occ, frames=self.frames,
                          frame_ends=[int(x) for x in frame_ends],
-                         engine="vector")
+                         engine="vector",
+                         cycles_skipped=int(s["skipped"]))
 
 
 _STATE_KEYS = ("t", "last_progress", "occ", "consumed", "kf", "fr",
-               "launched", "pushed", "credit", "hist", "hwm", "hwm_cycle")
+               "launched", "pushed", "credit", "hist", "hwm", "hwm_cycle",
+               "pflag", "skipped")
 
 
 def _segment_impl(consts, state, seg_target, frames, H, horizon,
-                  stall_limit, sink0):
+                  stall_limit, sink0, jump):
     """One while_loop over cycles until frame-target / completion / horizon
     / stall. Everything (including the netlist tensors) is a dynamic jit
     argument, so the compiled program is shared by every simulation whose
-    netlist has the same shape."""
+    netlist has the same shape — including ``jump`` (the event-jump
+    enable flag), which is branched on with ``lax.cond`` at runtime.
+
+    Structure: an inner while_loop steps plain cycles for as long as each
+    cycle moves a token (``pflag``); when a no-op cycle is executed the
+    inner loop yields and — once per plateau, not per cycle — the jump
+    branch computes the next event horizon (see ``_next_event_numpy`` for
+    the derivation) and fast-forwards the counter, ring, and credit
+    buckets in one step. The outer loop resumes stepping at the event."""
     import jax.numpy as jnp
     from jax import lax
 
@@ -392,7 +483,7 @@ def _segment_impl(consts, state, seg_target, frames, H, horizon,
 
     def code_of(state):
         (t, last_progress, occ, consumed, kf, fr, launched, pushed,
-         credit, hist, hwm, hwm_cycle) = state
+         credit, hist, hwm, hwm_cycle, pflag, skipped) = state
         done = jnp.all(jnp.where(is_sink, launched >= tot, True))
         at_target = jnp.where(
             sink0 >= 0, launched[jnp.maximum(sink0, 0)] >= seg_target, False)
@@ -404,7 +495,7 @@ def _segment_impl(consts, state, seg_target, frames, H, horizon,
 
     def body(state):
         (t, last_progress, occ, consumed, kf, fr, launched, pushed,
-         credit, hist, hwm, hwm_cycle) = state
+         credit, hist, hwm, hwm_cycle, pflag, skipped) = state
         # phase A (order matters: mirrors the scalar engine exactly)
         full = occ >= cap
         blocked = (out_adj @ full.astype(jnp.int64)) > 0
@@ -442,9 +533,69 @@ def _segment_impl(consts, state, seg_target, frames, H, horizon,
         progress = jnp.any(can_push) | jnp.any(pop) | jnp.any(launch)
         last_progress = jnp.where(progress, t, last_progress)
         return (t + 1, last_progress, occ, consumed, kf, fr, launched,
-                pushed, credit, hist, hwm, hwm_cycle)
+                pushed, credit, hist, hwm, hwm_cycle,
+                progress.astype(jnp.int64), skipped)
 
-    out = lax.while_loop(lambda st: code_of(st) == _RUNNING, body, state)
+    def jump_fn(state):
+        # transcription of VectorSim._next_event_numpy + _jump_numpy: the
+        # last executed cycle was a no-op, so every enabling condition is
+        # frozen until a maturation or credit-refill event
+        (t, last_progress, occ, consumed, kf, fr, launched, pushed,
+         credit, hist, hwm, hwm_cycle, pflag, skipped) = state
+        full = occ >= cap
+        blocked = (out_adj @ full.astype(jnp.int64)) > 0
+        cand = active & has_out & ~blocked & (pushed < launched)
+        Hs = hist.shape[0]  # static twin of the traced H argument
+        if M:
+            d_ar = jnp.arange(Hs, dtype=jnp.int64)
+            rows = (t + d_ar[:, None] - leff[None, :]) % H        # (H, M)
+            vals = jnp.take_along_axis(hist, rows, axis=0)
+            hit = (d_ar[:, None] < leff[None, :]) \
+                & (vals > pushed[None, :]) & cand[None, :]
+            d_first = jnp.argmax(hit, axis=0)                     # first True
+            te_mat = jnp.where(jnp.any(hit, axis=0), t + d_first, _INF)
+        else:
+            te_mat = jnp.full((0,), _INF)
+        need = fr * tpf + pick(need_buf, need_off + kf - 1, E)
+        done_dst = fr >= frames
+        unmet = (consumed < need) & ~done_dst
+        ready = (in_adj @ unmet.astype(jnp.int64)) == 0
+        done_m = launched >= tot
+        cred = throt & ready & ~done_m & active
+        gap = rden - credit
+        d_cred = jnp.maximum(0, -((-gap) // jnp.maximum(rnum, 1)) - 1)
+        te_cred = jnp.where(cred, t + d_cred, _INF)
+        te = jnp.minimum(jnp.min(te_mat, initial=_INF),
+                         jnp.min(te_cred, initial=_INF))
+        te = jnp.minimum(jnp.minimum(te, last_progress + stall_limit + 1),
+                         horizon)
+        te = jnp.maximum(te, t)
+        dt = te - t
+        r = jnp.arange(Hs, dtype=jnp.int64)
+        x_r = (te - 1) - ((te - 1 - r) % H)
+        hist = jnp.where((x_r >= t)[:, None], launched[None, :], hist)
+        credit = jnp.where(
+            throt, jnp.minimum(credit + dt * rnum, rden), credit)
+        return (te, last_progress, occ, consumed, kf, fr, launched,
+                pushed, credit, hist, hwm, hwm_cycle,
+                jnp.int64(1), skipped + dt)
+
+    def resume_fn(state):
+        # jump disabled: just rearm the inner loop to step the next cycle
+        return state[:12] + (jnp.int64(1), state[13])
+
+    def stepping(state):
+        return state[12] == 1
+
+    def outer(state):
+        state = lax.while_loop(
+            lambda st: (code_of(st) == _RUNNING) & stepping(st), body, state)
+        return lax.cond(
+            code_of(state) == _RUNNING,
+            lambda st: lax.cond(jump != 0, jump_fn, resume_fn, st),
+            lambda st: st, state)
+
+    out = lax.while_loop(lambda st: code_of(st) == _RUNNING, outer, state)
     return out, code_of(out)
 
 
@@ -458,11 +609,11 @@ _SEG_CACHE: Dict[Tuple, object] = {}
 
 
 def _segment(consts, state, seg_target, frames, H, horizon, stall_limit,
-             sink0):
+             sink0, jump):
     import jax
 
     args = (consts, state, seg_target, frames, H, horizon, stall_limit,
-            sink0)
+            sink0, jump)
     flat, _ = jax.tree_util.tree_flatten(args)
     key = tuple((np.shape(x), str(x.dtype)) for x in flat)
     compiled = _SEG_CACHE.get(key)

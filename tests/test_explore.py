@@ -1,0 +1,219 @@
+"""Design-space exploration engine (repro/explore) + population batching.
+
+Pins the Pareto mechanics (dominance, skyline, merge, best-at-floor), the
+sweep's seeded determinism (same seed -> bit-identical front), the
+population-batched evaluator's exact equivalence to serial engines, and
+the auto-vs-hand overlay contract on small app instances.
+"""
+from fractions import Fraction
+
+import pytest
+
+from repro.apps import SIM_CASES
+from repro.core import CompileOptions, ExploreOptions, compile_pipeline
+from repro.explore import (DesignPoint, ParetoFront, explore_design,
+                           freeze_depths)
+from repro.hwsim import VectorSim
+
+# tier-1-sized instances (smaller than the apps' default sim cases)
+SIZES = {
+    "convolution": dict(w=48, h=20),
+    "flow": dict(w=24, h=12),
+}
+
+
+def _design(name):
+    uf, T, hand = SIM_CASES[name](**SIZES[name])
+    return compile_pipeline(uf, T=T), hand
+
+
+@pytest.fixture(scope="module")
+def flow():
+    return _design("flow")
+
+
+# ---- Pareto mechanics (pure units) ----
+
+
+def _pt(area, tput, completed=True, label="p"):
+    return DesignPoint(
+        app="unit", label=label, origin="auto", T="1", solver="lp",
+        fifo_policy="analytic", area_units=area, area_clbs=area,
+        area_brams=0, fifo_bits=0, throughput=tput, cycles=100,
+        cycles_per_frame=100, completed=completed)
+
+
+def test_dominance_is_weak_with_one_strict():
+    assert _pt(10, 1.0).dominates(_pt(20, 1.0))     # cheaper, same tput
+    assert _pt(10, 2.0).dominates(_pt(10, 1.0))     # same area, faster
+    assert not _pt(10, 1.0).dominates(_pt(10, 1.0))  # equal: no strict edge
+    assert not _pt(10, 1.0).dominates(_pt(20, 2.0))  # trade-off
+    # deadlocked points neither dominate nor are dominated
+    assert not _pt(1, 9.0, completed=False).dominates(_pt(99, 0.1))
+    assert not _pt(1, 9.0).dominates(_pt(99, 0.1, completed=False))
+
+
+def test_front_is_the_skyline():
+    pts = [_pt(10, 1.0), _pt(20, 2.0), _pt(15, 0.5),   # 15u dominated
+           _pt(30, 2.0),                               # same tput, pricier
+           _pt(5, 3.0, completed=False)]               # deadlock: excluded
+    front = ParetoFront.of(pts)
+    assert [(p.area_units, p.throughput) for p in front.points] == \
+        [(10, 1.0), (20, 2.0)]
+    assert front.dominated(_pt(25, 1.5))
+    assert not front.dominated(_pt(9, 0.9))
+
+
+def test_front_ties_keep_first():
+    a, b = _pt(10, 1.0, label="first"), _pt(10, 1.0, label="second")
+    front = ParetoFront.of([a, b])
+    assert [p.label for p in front.points] == ["first"]
+
+
+def test_merge_re_sweeps():
+    front = ParetoFront.of([_pt(10, 1.0), _pt(20, 2.0)])
+    merged = front.merge([_pt(8, 1.5)])     # dominates the 10u point
+    assert [(p.area_units, p.throughput) for p in merged.points] == \
+        [(8, 1.5), (20, 2.0)]
+
+
+def test_best_at_floor_is_cheapest_qualifying():
+    front = ParetoFront.of([_pt(10, 1.0), _pt(20, 2.0), _pt(40, 3.0)])
+    assert front.best_at(1.5).area_units == 20
+    assert front.best_at(0.1).area_units == 10
+    assert front.best_at(9.0) is None
+
+
+def test_freeze_depths_is_canonical():
+    assert freeze_depths({(1, 2): 4, (0, 1): 3}) == \
+        freeze_depths({(0, 1): 3, (1, 2): 4})
+
+
+# ---- the sweep: determinism, engines, overlay ----
+
+
+def _single_netlist_opts(engine, n=6):
+    """One (T, solver) netlist so every engine evaluates the same small
+    candidate list."""
+    return ExploreOptions(t_ladder=("1",), solvers=("lp",), max_points=n,
+                          seed=0, engine=engine)
+
+
+def test_seeded_sweep_is_deterministic(flow):
+    design, hand = flow
+    opts = ExploreOptions(max_points=10, seed=3)
+    a = explore_design(design, opts, hand=hand)
+    b = explore_design(design, opts, hand=hand)
+    assert [p.as_dict() for p in a.points] == \
+        [p.as_dict() for p in b.points]
+    assert [p.depths for p in a.front.points] == \
+        [p.depths for p in b.front.points]
+    assert a.hand.as_dict() == b.hand.as_dict()
+
+
+def test_population_matches_serial_engines(flow):
+    """The population-batched evaluator must produce the same design
+    points as serial vector and serial scalar evaluation of the same
+    candidates (cycles_skipped aside: it is engine-diagnostic only)."""
+    design, hand = flow
+
+    def metrics(res):
+        out = []
+        for p in res.points:
+            d = p.as_dict()
+            d.pop("cycles_skipped")
+            out.append(d)
+        return out
+
+    runs = {e: explore_design(design, _single_netlist_opts(e), hand=hand)
+            for e in ("population", "vector", "scalar")}
+    assert metrics(runs["population"]) == metrics(runs["vector"]) \
+        == metrics(runs["scalar"])
+    assert len(runs["population"].points) > 1
+
+
+def test_population_sim_bit_identical_to_vector(flow):
+    """PopulationSim on K depth variants == K independent VectorSim runs,
+    down to the edge signature — including deadlocked variants."""
+    from repro.hwsim import PopulationSim
+    design, _ = flow
+    ana = dict(design.fifo.depth)
+    variants = [ana,
+                {k: v * 2 for k, v in ana.items()},
+                {k: 0 for k in ana}]            # degenerate: may deadlock
+    pop = PopulationSim(design.modules, design.edges, variants,
+                        frames=2).run()
+    assert len(pop) == len(variants)
+    for ds, got in zip(variants, pop):
+        ref = VectorSim(design.modules, design.edges, ds, frames=2).run()
+        assert got.cycles == ref.cycles
+        assert got.deadlock == ref.deadlock
+        assert got.frame_ends == ref.frame_ends
+        assert got.edge_signature() == ref.edge_signature()
+        assert got.engine == "population"
+
+
+def test_hand_overlay_and_ratio(flow):
+    design, hand = flow
+    res = explore_design(design, _single_netlist_opts("population"),
+                         hand=hand)
+    assert res.front.points, "sweep produced no completed design point"
+    assert res.hand is not None and res.hand.origin == "hand"
+    ratio = res.best_area_ratio()
+    # flow's sim-proven depths strip the solver slack: auto must at least
+    # match the hand design's area at its throughput
+    assert ratio is not None and ratio <= 1.01
+    text = "\n".join(res.report_lines())
+    assert "hand-annotated design" in text
+
+
+def test_design_explore_method(flow):
+    design, _ = flow
+    res = design.explore(_single_netlist_opts("population", n=4))
+    assert res.n_evaluated <= 4
+    assert res.app == design.name
+    d = res.as_dict()
+    assert d["front"] and d["points_evaluated"] == res.n_evaluated
+
+
+def test_explore_needs_compile_provenance(flow):
+    import dataclasses
+    design, _ = flow
+    bare = dataclasses.replace(design)
+    bare._uf = None
+    with pytest.raises(ValueError, match="compile_pipeline"):
+        explore_design(bare)
+
+
+def test_explore_options_validate():
+    with pytest.raises(ValueError, match="engine"):
+        ExploreOptions(engine="quantum")
+    with pytest.raises(ValueError, match="solver"):
+        ExploreOptions(solvers=("lp", "magic"))
+    with pytest.raises(ValueError, match="population"):
+        ExploreOptions(population=0)
+
+
+def test_max_points_truncates_deterministically(flow):
+    design, hand = flow
+    big = explore_design(design, ExploreOptions(max_points=9, seed=1),
+                         hand=hand)
+    small = explore_design(design, ExploreOptions(max_points=4, seed=1),
+                           hand=hand)
+    assert small.n_evaluated == 4 and big.n_evaluated == 9
+    assert [p.as_dict() for p in small.points] == \
+        [p.as_dict() for p in big.points[:4]]
+
+
+def test_hand_compile_uses_manual_overrides():
+    """The overlay point must price the manual-annotation compile, not the
+    plain analytic design (convolution's hand zeroes pad/crop bursts)."""
+    design, hand = _design("convolution")
+    assert hand                                  # {"pad": 0, "crop": 0}
+    res = explore_design(design, _single_netlist_opts("population", n=3),
+                         hand=hand)
+    manual = compile_pipeline(
+        SIM_CASES["convolution"](**SIZES["convolution"])[0],
+        T=Fraction(1),
+        options=CompileOptions(manual_fifo_overrides=hand))
+    assert res.hand.fifo_bits == manual.fifo.total_bits

@@ -214,6 +214,77 @@ def test_vector_starvation_diagnosed():
         assert res.sink_tokens == 5
 
 
+@pytest.mark.parametrize("name", PAPER_APPS)
+@pytest.mark.parametrize("jit", [True, False])
+def test_event_jump_bit_identical(designs, name, jit):
+    """Event-jump batching (skipping provably idle cycles in one hop) must
+    change nothing observable: identical cycle counts, frame boundaries
+    and edge signatures vs a jump-off run of the same engine — and vs the
+    scalar reference, which never jumps."""
+    design, _, _ = designs[name]
+    depths = dict(design.fifo.depth)
+    ref = simulate(design, engine="scalar", frames=2)
+    on = VectorSim(design.modules, design.edges, depths,
+                   frames=2).run(jit=jit, event_jump=True)
+    off = VectorSim(design.modules, design.edges, depths,
+                    frames=2).run(jit=jit, event_jump=False)
+    assert on.cycles == off.cycles == ref.cycles
+    assert on.frame_ends == off.frame_ends == ref.frame_ends
+    assert _edge_sig(on) == _edge_sig(off) == _edge_sig(ref)
+    # the counter is diagnostic only: jump-off never skips, and skipped
+    # cycles are excluded from the equivalence contract by construction
+    assert off.cycles_skipped == 0
+    assert on.cycles_skipped >= 0
+
+
+def test_event_jump_pyramid_deadlock_path():
+    """PYRAMID's analytic depths deadlock (the solver's known gap): the
+    event-jump must leap the stall tail on this real netlist and still
+    report the identical diagnosis and signature as scalar and jump-off
+    runs."""
+    uf, T, _ = SIM_CASES["pyramid"]()
+    design = compile_pipeline(uf, T=T)
+    depths = dict(design.fifo.depth)
+    ref = simulate(design, engine="scalar")
+    on = VectorSim(design.modules, design.edges,
+                   depths).run(event_jump=True)
+    off = VectorSim(design.modules, design.edges,
+                    depths).run(event_jump=False)
+    assert ref.deadlock is not None
+    assert on.deadlock == off.deadlock == ref.deadlock
+    assert on.cycles == off.cycles == ref.cycles
+    assert _edge_sig(on) == _edge_sig(off) == _edge_sig(ref)
+    assert on.cycles_skipped > 0 and off.cycles_skipped == 0
+
+
+@pytest.mark.parametrize("jit", [True, False])
+def test_event_jump_skips_stall_tail(jit):
+    """A starved netlist ends with a long no-progress tail (the engine
+    waits out stall_limit before diagnosing): the event-jump must leap it
+    in one hop — same diagnosis, same cycle count, skipped > 0."""
+    from repro.core.buffers import Edge
+    from repro.core.dtypes import UInt
+    from repro.core.rigel import Interface, RModule, ScheduleType
+
+    def mod(name, total):
+        st = ScheduleType(UInt(8), total, 1)
+        return RModule(name, "Map", Interface("Static", st),
+                       Interface("Static", st), Fraction(1), 0)
+
+    mods = [mod("src", 5), mod("snk", 10)]
+    edges = [Edge(0, 1, 8, 0, 0)]
+    runs = {}
+    for jump in (True, False):
+        vs = VectorSim(mods, edges, {(0, 1): 3})
+        vs.need_buf = np.arange(1, 11, dtype=np.int64)   # need(k) = k
+        runs[jump] = vs.run(jit=jit, event_jump=jump)
+    on, off = runs[True], runs[False]
+    assert on.deadlock == off.deadlock and "starved" in on.deadlock
+    assert on.cycles == off.cycles
+    assert _edge_sig(on) == _edge_sig(off)
+    assert on.cycles_skipped > 0 and off.cycles_skipped == 0
+
+
 def test_vector_horizon_matches_scalar(designs):
     design, _, _ = designs["flow"]
     ref = simulate(design, engine="scalar", max_cycles=40)

@@ -133,6 +133,27 @@ def test_apps_analytic_bound_is_dynamically_sufficient(name):
         assert need <= ana[key]
 
 
+@pytest.mark.xfail(
+    strict=True,
+    reason="known gap in the analytic FIFO solver: PYRAMID's reconvergent "
+           "Downsample/Upsample diamond needs the fanout edge to absorb a "
+           "whole resampling phase of cross-arm skew, which the per-edge "
+           "slack model (core/buffers.py) never sees — the analytic depths "
+           "deadlock and only the simulation-guided upward search "
+           "(hwsim/allocate.py) repairs them. This spec flips to a plain "
+           "pass the day the solver models cross-arm skew.")
+def test_pyramid_analytic_bound_covers_reconvergent_diamond():
+    """What the solver SHOULD guarantee (and does for the four paper
+    apps above): the analytic allocation completes a frame without
+    deadlock.  Strict-xfail pins the gap — if the solver silently starts
+    provisioning the diamond, this fails XPASS and the xfail gets
+    removed along with the allocator's repair path."""
+    uf, T, _ = SIM_CASES["pyramid"]()
+    design = compile_pipeline(uf, T=T)
+    res = simulate(design)
+    assert res.deadlock is None
+
+
 # ---- the (L, B) trace model on the built-in burst traces ----
 
 
