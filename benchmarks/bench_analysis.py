@@ -1,0 +1,94 @@
+"""Static-verification coverage bench (repro.analysis) + bench rows.
+
+One number per hwsim app, committed to BENCH_kernels.json as
+``apps.<name>.analysis.certified_edge_fraction``: the fraction of
+netlist FIFO edges whose handshake certificate carries a sound static
+occupancy bracket from the trace algebra (``analysis/traces.py``) —
+currently 1.0 everywhere, and gated higher-is-better by
+check_regression so a new edge class silently falling back to
+"unmodeled" fails the build instead of eroding coverage.
+
+Static passes only (no differential simulation): the point is the
+coverage metric, and the full oracle already runs in verify-smoke.
+
+    PYTHONPATH=src python -m benchmarks.bench_analysis [--json PATH]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+from typing import Dict
+
+_memo = None
+
+
+def bench_analysis() -> Dict[str, dict]:
+    """{app: {certified_edge_fraction, verdict, edges, wall_s}} under the
+    analytic (z3) solver — the depth source the certificates describe."""
+    global _memo
+    if _memo is not None:
+        return _memo
+    from repro.analysis import verify_design
+    from repro.analysis.__main__ import HWSIM_APPS
+    from repro.apps import SIM_CASES
+    from repro.core import compile_pipeline
+    out: Dict[str, dict] = {}
+    for name in HWSIM_APPS:
+        uf, T, _hand = SIM_CASES[name]()
+        t0 = time.time()
+        design = compile_pipeline(uf, T=T)
+        res = verify_design(design, sim=False)
+        out[name] = {
+            "certified_edge_fraction":
+                round(res.handshake.certified_edge_fraction, 4),
+            "verdict": res.handshake.verdict,
+            "edges": len(res.handshake.edges),
+            "wall_s": round(time.time() - t0, 3),
+        }
+    _memo = out
+    return out
+
+
+def write_json(path: str = "BENCH_kernels.json") -> dict:
+    from benchmarks.json_util import merge_json
+    rows = bench_analysis()
+    return merge_json(path, {
+        "analysis_note": (
+            "static verification coverage (repro.analysis): fraction of "
+            "FIFO edges carrying a certified trace-algebra occupancy "
+            "bracket (floor <= simulated hwm <= ceiling) under the "
+            "analytic fifo solver; gated higher-is-better"),
+        "apps": {app: {"analysis": {
+            "certified_edge_fraction": d["certified_edge_fraction"],
+            "edges": d["edges"],
+            "verdict": d["verdict"],
+        }} for app, d in rows.items()},
+    })
+
+
+def run(csv_rows):
+    for app, d in bench_analysis().items():
+        csv_rows.append((
+            f"analysis_{app}", f"{d['wall_s'] * 1e6:.0f}",
+            f"certified={d['certified_edge_fraction']};"
+            f"edges={d['edges']};verdict={d['verdict']}"))
+    return csv_rows
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="merge analysis rows into this BENCH json")
+    args = ap.parse_args()
+    for app, d in bench_analysis().items():
+        print(f"{app}: certified_edge_fraction="
+              f"{d['certified_edge_fraction']} edges={d['edges']} "
+              f"verdict={d['verdict']} ({d['wall_s']}s)")
+    if args.json:
+        write_json(args.json)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -6,10 +6,12 @@ Two measurements, both committed to BENCH_kernels.json:
      ``best_area_ratio`` (cheapest auto front point at the hand design's
      throughput, as a fraction of the hand area — the auto-vs-hand
      answer, gated lower-is-better by check_regression), points/sec, and
-     the event-jump skipped-cycle count.  Apps: FLOW and CONVOLUTION —
-     the two paper apps whose sweeps find hand-competitive designs
-     (PYRAMID's analytic-gap candidates mostly deadlock; its story lives
-     in the hwsim bench and the xfail spec).
+     the event-jump skipped-cycle count, and the statically-rejected
+     candidate count.  Apps: FLOW and CONVOLUTION (the paper apps whose
+     sweeps find hand-competitive designs) plus PYRAMID, whose sweep
+     showcases the static pre-filter: the broadcast-residue rule rejects
+     provably-deadlocked depth variants before simulation, so points/sec
+     captures the win (gated against regression).
 
   2. The batching speedup (``explore_speedup``): identical candidates
      (one netlist, the FIFO depth-policy variants) evaluated by the
@@ -27,7 +29,7 @@ import sys
 import time
 from typing import Dict, List
 
-BENCH_APPS = ("flow", "convolution")
+BENCH_APPS = ("flow", "convolution", "pyramid")
 MAX_POINTS = 24
 SEED = 0
 # --check floors
@@ -141,8 +143,8 @@ def write_json(path: str = "BENCH_kernels.json") -> dict:
         "apps": {app: {"explore": {
             k: d[k] for k in ("front_size", "points_evaluated",
                               "points_per_sec", "cycles_skipped",
-                              "best_area_ratio", "hand_dominated",
-                              "seed")
+                              "static_rejects", "best_area_ratio",
+                              "hand_dominated", "seed")
             if d.get(k) is not None}}
             for app, d in rows.items()},
     })
@@ -155,7 +157,8 @@ def run(csv_rows):
             f"front={d['front_size']};points={d['points_evaluated']};"
             f"pts_per_s={d['points_per_sec']};"
             f"best_area_ratio={d.get('best_area_ratio')};"
-            f"skipped={d['cycles_skipped']}"))
+            f"skipped={d['cycles_skipped']};"
+            f"static_rejects={d.get('static_rejects', 0)}"))
     sp = bench_speedup()
     csv_rows.append((
         "explore_speedup", f"{sp['pop_wall_s'] * 1e6:.0f}",
@@ -178,7 +181,8 @@ def main() -> int:
               f"({d['points_per_sec']} pts/s) "
               f"best_area_ratio={d.get('best_area_ratio')} "
               f"hand_dominated={d['hand_dominated']} "
-              f"skipped={d['cycles_skipped']}")
+              f"skipped={d['cycles_skipped']} "
+              f"static_rejects={d.get('static_rejects', 0)}")
     sp = bench_speedup()
     print(f"speedup ({sp['app']}, {sp['candidates']} candidates): "
           f"population {sp['pop_points_per_sec']} pts/s vs scalar "

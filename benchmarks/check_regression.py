@@ -58,8 +58,12 @@ CONTROL_PLANE_METRICS = ("serve.continuous_x_vs_flush", "serve.shed_rate",
 # hand-competitive designs) and the evaluation throughput of the
 # population-batched simulator
 EXPLORE_METRICS = ("explore.best_area_ratio", "explore.points_per_sec")
+# static verification (bench_analysis, the apps[*]["analysis"] rows): the
+# fraction of FIFO edges carrying a certified trace-algebra occupancy
+# bracket — a drop means an edge class fell back to "unmodeled"
+ANALYSIS_METRICS = ("analysis.certified_edge_fraction",)
 METRICS = ((METRIC, SERVE_METRIC) + MK_METRICS + CONTROL_PLANE_METRICS
-           + EXPLORE_METRICS)
+           + EXPLORE_METRICS + ANALYSIS_METRICS)
 
 # metrics where a RISE (not a drop) past the threshold is the regression:
 # shed fraction creeping up means admission got lossier at the same

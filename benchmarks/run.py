@@ -24,9 +24,9 @@ def main() -> None:
                          "stops producing a gated metric hard-fails instead "
                          "of being masked by the stale merged value")
     args = ap.parse_args()
-    from benchmarks import (bench_explore, bench_fifo, bench_hls_analog,
-                            bench_hwsim, bench_kernels, bench_lowering,
-                            bench_roofline, bench_serve,
+    from benchmarks import (bench_analysis, bench_explore, bench_fifo,
+                            bench_hls_analog, bench_hwsim, bench_kernels,
+                            bench_lowering, bench_roofline, bench_serve,
                             bench_schedule_range)
     rows = []
     benches = [
@@ -39,6 +39,7 @@ def main() -> None:
         ("serve throughput/latency", bench_serve.run),
         ("roofline (dry-run artifacts)", bench_roofline.run),
         ("design-space exploration", bench_explore.run),
+        ("static-verification coverage", bench_analysis.run),
     ]
     for name, fn in benches:
         print(f"# running {name}", file=sys.stderr, flush=True)
@@ -56,7 +57,8 @@ def main() -> None:
                 os.remove(args.fresh_json)
             paths.append(args.fresh_json)
         for writer in (bench_lowering.write_json, bench_serve.write_json,
-                       bench_hwsim.write_json, bench_explore.write_json):
+                       bench_hwsim.write_json, bench_explore.write_json,
+                       bench_analysis.write_json):
             for path in paths:
                 try:
                     writer(path)

@@ -8,7 +8,12 @@
   3. handshake.py — netlist token-rate balance, static FIFO occupancy
                     floors, trace-model deadlock certification, and the
                     three-way differential oracle
-                    ``static_lower <= simulated hwm <= analytic capacity``.
+                    ``static_lower <= simulated hwm <= static_upper``,
+                    backed by traces.py — the symbolic phase-trace algebra
+                    that classifies every edge (stream / dma-frame /
+                    serializer / data-dependent), certifies sound occupancy
+                    brackets, and computes the cross-arm broadcast demand
+                    gaps the analytic FIFO solver provisions for.
 
 ``verify_design`` bundles all three for one compiled HWDesign (surfaced as
 ``HWDesign.verify()``); ``python -m repro.analysis --all-apps --check``
@@ -23,6 +28,10 @@ from .handshake import (CrossCheckResult, EdgeCheck, HandshakeReport,
                         certify, cross_check, edge_flow, static_lower_bounds)
 from .ranges import (Iv, NodeRange, RangeReport, analyze, module_proven_bits,
                      narrowed_token_bits)
+from .traces import (EDGE_CLASSES, EdgeCertificate, PhaseTrace,
+                     broadcast_extra_slots, broadcast_gaps, certify_edges,
+                     classify_edge, deadlock_reason, edge_need_totals,
+                     peak_backlog, required_capacities)
 from .verify_ir import (InvariantViolation, assert_ir, check_ir,
                         check_rewrites, verify_enabled)
 
@@ -33,6 +42,9 @@ __all__ = [
     "verify_enabled",
     "edge_flow", "static_lower_bounds", "certify", "cross_check",
     "HandshakeReport", "EdgeCheck", "CrossCheckResult",
+    "PhaseTrace", "EdgeCertificate", "EDGE_CLASSES", "classify_edge",
+    "certify_edges", "edge_need_totals", "peak_backlog", "broadcast_gaps",
+    "broadcast_extra_slots", "required_capacities", "deadlock_reason",
     "VerifyResult", "verify_design",
 ]
 

@@ -5,12 +5,15 @@ linting + the three-way differential oracle) over registered apps::
 
     python -m repro.analysis --app convolution
     python -m repro.analysis --all-apps --check     # the CI verify-smoke gate
+    python -m repro.analysis --all-apps --json      # bench-consumable summary
 
 ``--check`` exits nonzero unless, for every selected app under BOTH fifo
 solvers (analytic z3 and simulation-guided "sim"): every integer node is
 proven wrap-free or carries a wrap witness, the rewrite fixpoint is
 structurally clean, the netlist is certified (or sim-proven) deadlock-free,
-and ``static_lower <= simulated hwm <= analytic capacity`` holds per FIFO.
+and ``static_lower <= simulated hwm <= static_upper`` holds per FIFO.
+``--json`` prints per-(app, solver) verdicts and the certified edge
+fraction (the bench-gated trace-algebra coverage metric).
 """
 from __future__ import annotations
 
@@ -21,15 +24,10 @@ from typing import List, Optional
 from . import VerifyResult, verify_design
 
 # apps the cycle simulator supports end-to-end; ``--all-apps`` walks these.
+# Every (app, solver) pair runs the full oracle — including pyramid's
+# analytic depths, which the cross-arm broadcast provisioning
+# (analysis/traces.py -> core/buffers.py extra_slots) made deadlock-free.
 HWSIM_APPS = ("convolution", "descriptor", "flow", "stereo", "pyramid")
-
-# (app, solver) pairs verified static-only: pyramid's *analytic* depths
-# deadlock in hwsim (reconvergent down/upsample join — the per-edge slack
-# model never sees the whole-resampling-phase skew on the fanout edge), so
-# the simulation oracle has nothing sound to replay at those depths.  The
-# fifo_solver="sim" install repairs the allocation by upward search
-# (hwsim/allocate.py) and IS simulation-verified below.
-STATIC_ONLY = {("pyramid", "z3")}
 
 
 def _run_one(name: str, solver: str, engine: str, sim: bool
@@ -63,6 +61,9 @@ def main(argv: Optional[List[str]] = None) -> int:
                     help="skip the simulation cross-check (static only)")
     ap.add_argument("--check", action="store_true",
                     help="exit nonzero on any verification failure")
+    ap.add_argument("--json", action="store_true",
+                    help="emit a machine-readable summary (per app/solver: "
+                         "verdict, certified_edge_fraction, oracle outcome)")
     ap.add_argument("-v", "--verbose", action="store_true",
                     help="per-node / per-edge detail")
     args = ap.parse_args(argv)
@@ -70,27 +71,38 @@ def main(argv: Optional[List[str]] = None) -> int:
     names = list(HWSIM_APPS) if args.all_apps or not args.app else args.app
     solvers = ("z3", "sim") if args.solver == "both" else (args.solver,)
     failures: List[str] = []
+    summary: dict = {}
     for name in names:
         for solver in solvers:
-            static_only = (name, solver) in STATIC_ONLY
-            if static_only:
-                print(f"verify {name}[{solver}]: static passes only "
-                      "(analytic depths deadlock in hwsim; the sim solver "
-                      "repairs and verifies them)")
             try:
                 res = _run_one(name, solver, args.engine,
-                               sim=not args.no_sim and not static_only)
+                               sim=not args.no_sim)
             except Exception as exc:           # compile/verify blew up
-                print(f"verify {name}[{solver}]: ERROR: {exc}")
+                print(f"verify {name}[{solver}]: ERROR: {exc}",
+                      file=sys.stderr if args.json else sys.stdout)
                 failures.append(f"{name}[{solver}]")
                 continue
-            print("\n".join(res.report_lines(verbose=args.verbose)))
+            if not args.json:
+                print("\n".join(res.report_lines(verbose=args.verbose)))
+            summary.setdefault(name, {})[solver] = {
+                "ok": res.ok,
+                "verdict": res.handshake.verdict,
+                "edges": len(res.handshake.edges),
+                "certified_edge_fraction":
+                    res.handshake.certified_edge_fraction,
+                "cross_ok": None if res.cross is None else res.cross.ok,
+            }
             if not res.ok:
                 failures.append(res.name)
+    if args.json:
+        import json
+        print(json.dumps(summary, indent=2, sort_keys=True))
     if failures:
-        print(f"\nFAILED: {', '.join(failures)}")
+        if not args.json:
+            print(f"\nFAILED: {', '.join(failures)}")
         return 1 if args.check else 0
-    print(f"\nall {len(names) * len(solvers)} verification runs ok")
+    if not args.json:
+        print(f"\nall {len(names) * len(solvers)} verification runs ok")
     return 0
 
 

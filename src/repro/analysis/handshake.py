@@ -27,23 +27,29 @@ simulation needed.  Three layers:
      ahead of the producer (starvation-freedom, the ``check_schedule``
      condition) and (b) the model's transient backlog never exceeds the
      installed FIFO capacity, bounding reconvergent-fanout latency skew.
-     The model is exact only on *rate-matched pixel-streaming* edges
-     (equal per-frame pixel payloads and equal scalar service rates on
-     both sides); on the rest — DMA frame sources, serializers,
-     data-dependent filters, deliberately slower consumers — backpressure
-     throttles the producer benignly and a per-edge trace cannot
-     distinguish that from under-buffering, so those edges are marked
-     unmodeled and left to the simulation cross-check.  Clean modeled
-     edges => the installed depths admit the solved schedule on the
-     paper's monotone-dataflow design space.  Simulation-shrunk depths
-     intentionally sit *below* the model's backlog (that is the point of
-     measuring); they fall back to the ``sim-proven`` verdict when the
-     shrink re-verified (``fifo_sim_proven``).
+     The numeric trace replay is exact only on *rate-matched
+     pixel-streaming* edges (equal per-frame pixel payloads and equal
+     scalar service rates on both sides).  The remaining edges are no
+     longer left unmodeled: ``analysis/traces.py`` classifies every edge
+     (stream / dma-frame / serializer / data-dependent — the verdict
+     ladder certified > sim-proven > at-risk applies per design) and
+     certifies a sound occupancy bracket ``static_lower <= hwm <=
+     static_upper`` where the ceiling is ``min(installed capacity,
+     producer tokens per frame)`` — on those classes backpressure
+     throttles the producer benignly, so capacity (not an exact trace) is
+     the operative bound, and the cross-check asserts the bracket against
+     the simulated marks.  Clean modeled edges => the installed depths
+     admit the solved schedule on the paper's monotone-dataflow design
+     space.  Simulation-shrunk depths intentionally sit *below* the
+     model's backlog (that is the point of measuring); they fall back to
+     the ``sim-proven`` verdict when the shrink re-verified
+     (``fifo_sim_proven``).
 
 Note ``certify`` is a per-edge lint, not a whole-graph deadlock proof:
 cross-edge join stalls (a fanout blocked on one arm while the other
-starves) are exactly what the FIFO solver and the cycle simulator exist
-for — the differential ``cross_check`` closes that gap.
+starves) are what ``traces.broadcast_extra_slots`` (cross-arm demand
+gaps, fed into the analytic solver) and the differential ``cross_check``
+close together.
 """
 from __future__ import annotations
 
@@ -55,6 +61,7 @@ import numpy as np
 
 from ..core import schedule as sched
 from ..hwsim.sim import need_spec
+from .traces import EDGE_CLASSES, classify_edge
 
 EdgeKey = Tuple[int, int]
 
@@ -81,11 +88,19 @@ class EdgeCheck:
     cons_px: int                   # consumer input-interface px per frame
     installed_depth: int
     static_lower: int              # sound hwm floor (tokens)
+    static_upper: int = 0          # sound hwm ceiling (tokens)
+    klass: str = "stream"          # traces.EDGE_CLASSES certificate class
     model_backlog: int = 0         # trace-model peak backlog (tokens)
     residue: int = 0               # tokens produced but never consumed
     starved: bool = False          # consumption trace outruns production
     shortfall: int = 0             # backlog tokens beyond capacity + slop
-    modeled: bool = True           # trace model exact on this edge
+    modeled: bool = True           # numeric trace replay exact on this edge
+
+    @property
+    def certified(self) -> bool:
+        """The edge carries a sound static occupancy bracket."""
+        return (self.klass in EDGE_CLASSES
+                and self.static_upper >= self.static_lower)
 
     @property
     def rate_balanced(self) -> bool:
@@ -95,9 +110,9 @@ class EdgeCheck:
         s = (f"  {self.key[0]:3d}->{self.key[1]:<3d} "
              f"{self.names[0]}->{self.names[1]}: tpf={self.tpf} "
              f"need={self.need_total} depth={self.installed_depth} "
-             f"lower={self.static_lower}")
+             f"hwm in [{self.static_lower}, {self.static_upper}]")
         s += f" backlog~{self.model_backlog}" if self.modeled \
-            else " unmodeled"
+            else f" [{self.klass}]"
         if self.residue:
             s += f" residue={self.residue}"
         if self.starved:
@@ -125,11 +140,29 @@ class HandshakeReport:
             out[e.key] = max(out.get(e.key, 0), e.static_lower)
         return out
 
+    @property
+    def upper_bounds(self) -> Dict[EdgeKey, int]:
+        """Certified per-FIFO hwm ceilings (parallel edges merged by max:
+        the shared physical FIFO's mark is bounded by the loosest arm)."""
+        out: Dict[EdgeKey, int] = {}
+        for e in self.edges:
+            out[e.key] = max(out.get(e.key, 0), e.static_upper)
+        return out
+
+    @property
+    def certified_edge_fraction(self) -> float:
+        """Fraction of edges carrying a sound static occupancy bracket —
+        the bench-gated coverage metric (1.0 = no edge left unmodeled)."""
+        if not self.edges:
+            return 1.0
+        return sum(1 for e in self.edges if e.certified) / len(self.edges)
+
     def report_lines(self, verbose: bool = False) -> List[str]:
         flagged = [e for e in self.edges
                    if e.starved or e.shortfall or not e.rate_balanced]
         lines = [f"handshake: {len(self.edges)} edges, "
-                 f"{len(self.errors)} errors, verdict={self.verdict}"]
+                 f"{len(self.errors)} errors, verdict={self.verdict}, "
+                 f"certified={self.certified_edge_fraction:.0%}"]
         for e in (self.edges if verbose else flagged):
             lines.append(e.line())
         lines.extend(f"  {err}" for err in self.errors)
@@ -157,13 +190,16 @@ def edge_flow(design) -> List[EdgeCheck]:
                     _ceil_div(spec.out_total * spec.v_out, spec.pxs_out))
             npx = int(spec.profile[p - 1]) if p > 0 else 0
             raw = _ceil_div(npx * spec.pxs_in, spec.v_in)
+        installed = int(depths.get((e.src, e.dst), 0))
         checks.append(EdgeCheck(
             key=(e.src, e.dst), names=(prod.name, cons.name),
             tpf=tpf_e, need_total=need_total, raw_need=raw,
             prod_px=ps.w * ps.h * ps.px_scalars,
             cons_px=ci.w * ci.h * ci.px_scalars,
-            installed_depth=int(depths.get((e.src, e.dst), 0)),
+            installed_depth=installed,
             static_lower=1 if need_total >= 1 else 0,
+            static_upper=min(installed + 1, tpf_e),
+            klass=classify_edge(prod, cons),
             residue=max(0, tpf_e - need_total)))
     return checks
 
@@ -189,6 +225,7 @@ def certify(design, depths: Optional[Mapping[EdgeKey, int]] = None,
     for chk, e in zip(report.edges, design.edges):
         if depths is not None and chk.key in depths:
             chk.installed_depth = int(depths[chk.key])
+            chk.static_upper = min(chk.installed_depth + 1, chk.tpf)
         p, c = design.modules[e.src], design.modules[e.dst]
         vp = p.iface_out.sched.v
         ci = (c.iface_in or c.iface_out).sched
@@ -219,9 +256,14 @@ def certify(design, depths: Optional[Mapping[EdgeKey, int]] = None,
         if chk.model_backlog > cap:
             chk.shortfall = chk.model_backlog - cap
     n_modeled = sum(1 for c in report.edges if c.modeled)
+    by_class: Dict[str, int] = {}
+    for c in report.edges:
+        by_class[c.klass] = by_class.get(c.klass, 0) + 1
+    breakdown = ", ".join(f"{k}={by_class[k]}" for k in EDGE_CLASSES
+                          if k in by_class)
     report.notes.append(
-        f"{n_modeled}/{len(report.edges)} edges rate-matched (trace model "
-        "applies); the rest are simulation-checked")
+        f"{n_modeled}/{len(report.edges)} edges rate-matched (exact trace "
+        f"replay); all carry certified occupancy brackets ({breakdown})")
     for chk in report.edges:
         if not chk.rate_balanced:
             report.errors.append(
@@ -258,7 +300,7 @@ class CrossCheckResult:
 
     hwm: Dict[EdgeKey, int]
     lower: Dict[EdgeKey, int]
-    upper: Dict[EdgeKey, int]     # max(analytic, installed) depth + 1
+    upper: Dict[EdgeKey, int]     # min(installed depth + 1, tokens/frame)
     violations: List[str] = field(default_factory=list)
     completed: bool = True
     engine: str = ""
@@ -276,37 +318,28 @@ class CrossCheckResult:
 
 def cross_check(design, engine: str = "auto",
                 max_cycles: Optional[int] = None) -> CrossCheckResult:
-    """Assert ``static_lower <= simulated hwm <= max(analytic, installed)
-    depth + 1`` per FIFO, from one single-frame run at the *installed*
-    depths — the design
-    as shipped.  Completion proves deadlock-freedom; the lower arm proves
-    the linter's floors are realized by actual token flow (a floor the
+    """Assert ``static_lower <= simulated hwm <= static_upper`` per FIFO,
+    from one single-frame run at the *installed* depths — the design as
+    shipped.  Completion proves deadlock-freedom; the lower arm proves the
+    linter's floors are realized by actual token flow (a floor the
     simulator never reaches means the linter over-claims or the simulator
-    drops tokens); the upper arm checks the realized marks against the
-    *analytic* solver's depths — for simulation-guided installs
-    (``fifo_solver="sim"``, installed <= analytic) this asserts that the
-    analytic model still covers every realized mark, and in all cases that
-    the simulator's capacity accounting (occupancy <= depth + 1: slot plus
+    drops tokens); the upper arm is the certified ceiling ``min(installed
+    depth + 1, producer tokens per frame)`` — derived uniformly from the
+    installed depths, so it covers shrunk installs (``fifo_solver="sim"``)
+    and grown ones (cross-arm broadcast slots) alike, and asserts that the
+    simulator's capacity accounting (occupancy <= depth + 1: slot plus
     output register) is never breached.  Any violation is a bug in one of
     the three engines (linter, simulator, or buffer solver).
 
-    Runs a single frame: the floors are per-frame guarantees, and
-    multi-frame steady state can carry inter-frame residue that the
-    analytic single-frame capacity bound does not model."""
+    Runs a single frame: the floors are per-frame guarantees, and the
+    tokens-per-frame arm of the ceiling is a single-frame production
+    total; multi-frame steady state can carry inter-frame residue."""
     from ..hwsim import simulate
     res = simulate(design, max_cycles=max_cycles, frames=1, engine=engine)
     hwm = res.hwm_by_key()
-    lower = static_lower_bounds(design)
-    analytic = dict(design.fifo_analytic if design.fifo_analytic is not None
-                    else design.fifo.depth)
-    installed = dict(design.fifo.depth)
-    # the capacity arm bounds the realized marks by the larger of the two
-    # models: for shrunk installs (installed <= analytic) the analytic
-    # depth still covers; for *grown* installs — the allocator's upward
-    # repair of a deadlocked analytic allocation (PYRAMID's reconvergent
-    # resampling join) — the installed depth is the operative capacity and
-    # the analytic one is a known under-estimate, not a violation
-    upper = {k: max(d, installed.get(k, 0)) + 1 for k, d in analytic.items()}
+    report = HandshakeReport(edges=edge_flow(design))
+    lower = report.lower_bounds
+    upper = report.upper_bounds
     out = CrossCheckResult(hwm=hwm, lower=lower, upper=upper,
                            completed=res.completed, engine=res.engine)
     if not res.completed:

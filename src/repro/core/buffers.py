@@ -19,7 +19,7 @@ integral — the problem is the classic retiming/register-minimization LP
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Mapping, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -57,12 +57,21 @@ class BufferSolution:
 
 def solve_buffers(n_modules: int, edges: Sequence[Edge],
                   solver: str = "z3",
-                  include_burst: bool = True) -> BufferSolution:
+                  include_burst: bool = True,
+                  extra_slots: Optional[Mapping[Tuple[int, int], int]]
+                  = None) -> BufferSolution:
     """Solve the register-minimization problem.
 
     solver: "z3" (paper-faithful), "lp" (scipy), or "asap" (no optimization:
     earliest-start longest-path schedule, which is what careful manual
     allocation achieves on in-tree pipelines).
+
+    ``extra_slots`` adds per-edge slots on top of the solved slack + burst:
+    the cross-arm demand gaps of reconvergent broadcast joins
+    (``analysis.traces.broadcast_extra_slots``), which are a property of an
+    edge's *sibling* arms and therefore invisible to this per-edge LP — a
+    broadcast out-edge must also hold the tokens it receives in lockstep
+    with the hungriest arm but whose own consumer never pops them.
     """
     if n_modules == 0:
         return BufferSolution([], {}, {}, 0, solver)
@@ -87,6 +96,8 @@ def solve_buffers(n_modules: int, edges: Sequence[Edge],
         sl = start[e.dst] - start[e.src] - e.src_latency
         assert sl >= 0, (e, start[e.src], start[e.dst])
         d = sl + (e.src_burst if include_burst else 0)
+        if extra_slots:
+            d += int(extra_slots.get((e.src, e.dst), 0))
         slack[(e.src, e.dst)] = sl
         depth[(e.src, e.dst)] = d
         total += d * e.token_bits

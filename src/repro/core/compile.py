@@ -654,8 +654,25 @@ def compile_pipeline(uf: UserFunction, T: Fraction = Fraction(1),
         ]
 
     # --- FIFO allocation (§4.2-4.3) ---
+    # cross-arm demand gaps (analysis/traces.py): a broadcast out-edge must
+    # also hold tokens pushed in lockstep for a hungrier sibling arm but
+    # never popped by its own consumer — invisible to the per-edge slack
+    # LP.  Only netlists with a multi-out producer can have them (the
+    # profiled need tables behind the gaps cost O(W*H) to build, so skip
+    # the pass entirely on pure chains).
+    extra_slots = None
+    srcs = [e.src for e in edges]
+    if len(srcs) > len(set(srcs)):          # some producer has >= 2 out-edges
+        from ..analysis.traces import broadcast_extra_slots
+        extra_slots = broadcast_extra_slots(modules, edges) or None
     fifo = buf.solve_buffers(len(modules), edges, solver=fifo_solver,
-                             include_burst=include_burst)
+                             include_burst=include_burst,
+                             extra_slots=extra_slots)
+    if extra_slots:
+        notes.append(
+            "cross-arm broadcast residue: "
+            + ", ".join(f"fifo {k} +{v} slots"
+                        for k, v in sorted(extra_slots.items())))
 
     out_res = resolve(out)
     out_mod = node_to_mod[out_res.uid]

@@ -22,6 +22,15 @@ Pareto front; the app's HAND_FIFO design is evaluated the same way and
 overlaid.  Deadlocked candidates are kept (reported, never on the front):
 an under-provisioned FIFO allocation that deadlocks is a real answer the
 search must see, not an error.
+
+Before simulating, each netlist's candidates pass through a static
+pre-filter (``analysis.traces.required_capacities`` /
+``deadlock_reason``): a depth set that provably deadlocks — some
+broadcast out-edge has less capacity than the cross-arm residue it must
+hold — is recorded as a deadlocked point *without* a simulation run,
+carrying the static proof as its diagnosis.  On PYRAMID this skips the
+sweep's slowest candidates (each would otherwise burn a full
+``stall_limit`` plateau before the simulator gives up).
 """
 from __future__ import annotations
 
@@ -32,10 +41,12 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from ..analysis.traces import deadlock_reason, required_capacities
 from ..core.compile import (CompileOptions, ExploreOptions, HWDesign,
                             compile_pipeline)
 from ..core.rigel import Resources
 from ..hwsim.area import area_units, fifo_area
+from ..hwsim.occupancy import OccupancyTrace
 from ..hwsim.sim import SimResult, build_sim
 from .pareto import DesignPoint, ParetoFront, freeze_depths
 
@@ -63,6 +74,7 @@ class ExploreResult:
     wall_seconds: float
     cycles_skipped: int
     notes: List[str] = field(default_factory=list)
+    static_rejects: int = 0
 
     @property
     def n_evaluated(self) -> int:
@@ -94,6 +106,7 @@ class ExploreResult:
             "eval_seconds": round(self.eval_seconds, 3),
             "wall_seconds": round(self.wall_seconds, 3),
             "cycles_skipped": self.cycles_skipped,
+            "static_rejects": self.static_rejects,
             "engine": self.options.engine,
             "seed": self.options.seed,
         }
@@ -112,7 +125,8 @@ class ExploreResult:
             f"{self.eval_seconds:.2f}s ({self.points_per_sec:.1f} pts/s, "
             f"engine={self.options.engine}, "
             f"{self.cycles_skipped} cycles event-jumped, "
-            f"{n_dead} deadlocked), front size "
+            f"{n_dead} deadlocked, {self.static_rejects} rejected "
+            "statically), front size "
             f"{len(self.front.points)}"]
         lines.extend(self.front.report_lines(hand=self.hand))
         ratio = self.best_area_ratio()
@@ -321,9 +335,12 @@ def explore_design(design: HWDesign,
             netlists.append((d_t, solver, variants))
 
     # phase 2: evaluate, population-batched per netlist; the wall-clock
-    # budget is checked between batches (the first batch always runs)
+    # budget is checked between batches (the first batch always runs).
+    # Statically-provable deadlocks (cross-arm broadcast residue beyond a
+    # candidate's capacity) skip simulation and carry the proof instead.
     points: List[DesignPoint] = []
     eval_s = 0.0
+    static_rejects = 0
     for d_t, solver, variants in netlists:
         if points and options.budget_s is not None \
                 and time.perf_counter() - wall0 > options.budget_s:
@@ -332,12 +349,33 @@ def explore_design(design: HWDesign,
                 "evaluated")
             break
         t0 = time.perf_counter()
-        results = _evaluate(d_t, [ds for _, ds in variants], options)
+        required = required_capacities(d_t.modules, d_t.edges)
+        live: List[Tuple[str, Dict[EdgeKey, int]]] = []
+        rejected: List[Tuple[str, Dict[EdgeKey, int], str]] = []
+        for policy, ds in variants:
+            reason = deadlock_reason(ds, required) if required else None
+            if reason is None:
+                live.append((policy, ds))
+            else:
+                rejected.append((policy, ds, reason))
+        results = _evaluate(d_t, [ds for _, ds in live], options) \
+            if live else []
         eval_s += time.perf_counter() - t0
-        for (policy, ds), res in zip(variants, results):
+        for (policy, ds), res in zip(live, results):
             label = f"T={d_t.T} {solver} {policy}"
             points.append(_point(d_t, app, "auto", label, solver, policy,
                                  ds, res))
+        for policy, ds, reason in rejected:
+            res = SimResult(cycles=0, sink_tokens=0, deadlock=reason,
+                            occupancy=OccupancyTrace([], 0),
+                            frames=options.frames, engine="static")
+            label = f"T={d_t.T} {solver} {policy}"
+            points.append(_point(d_t, app, "auto", label, solver, policy,
+                                 ds, res))
+        static_rejects += len(rejected)
+    if static_rejects:
+        notes.append(f"{static_rejects} candidate(s) rejected by the "
+                     "static broadcast-residue pre-filter (no simulation)")
 
     hand_pt = _hand_point(design, options, hand, notes) \
         if hand is not None else None
@@ -345,7 +383,8 @@ def explore_design(design: HWDesign,
     return ExploreResult(
         app=app, options=options, front=front, hand=hand_pt, points=points,
         eval_seconds=eval_s, wall_seconds=time.perf_counter() - wall0,
-        cycles_skipped=sum(p.cycles_skipped for p in points), notes=notes)
+        cycles_skipped=sum(p.cycles_skipped for p in points), notes=notes,
+        static_rejects=static_rejects)
 
 
 def explore_app(name: str, options: Optional[ExploreOptions] = None

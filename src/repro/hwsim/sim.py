@@ -129,7 +129,10 @@ class SimResult:
     ``cycles_skipped`` counts cycles the vector engine fast-forwarded over
     stall plateaus (event-jump batching) — they are included in ``cycles``
     and deliberately NOT part of ``edge_signature``, which must be identical
-    whether or not the engine jumped."""
+    whether or not the engine jumped.  ``cycles_saved`` counts cycles the
+    deadlock early-abort skipped (a provably frozen state jumps straight
+    to the patient path's return cycle) — also included in ``cycles``, so
+    results are bit-identical with the abort on or off."""
 
     cycles: int
     sink_tokens: int
@@ -139,6 +142,7 @@ class SimResult:
     frame_ends: List[int] = field(default_factory=list)
     engine: str = "scalar"
     cycles_skipped: int = 0
+    cycles_saved: int = 0
 
     @property
     def completed(self) -> bool:
@@ -346,7 +350,14 @@ class CycleSim:
         return 8 * est + 16 * self._stall_limit()
 
     def run(self, max_cycles: Optional[int] = None,
-            sample_every: int = 0) -> SimResult:
+            sample_every: int = 0, early_abort: bool = True) -> SimResult:
+        """``early_abort=True`` (the default) detects provably frozen
+        states — zero progress, no inflight token maturing later, no
+        module poppable or pending a credit-refill launch — and jumps
+        straight to the cycle the patient stall-limit path would return
+        at, with the identical diagnosis and ``cycles_saved`` reporting
+        the skip.  Disabled automatically when sampling (a time series of
+        repeated plateau samples is the caller's explicit request)."""
         horizon = max_cycles or self._default_horizon()
         stall_limit = self._stall_limit()
         t = 0
@@ -420,8 +431,46 @@ class CycleSim:
                     frame_ends.append(t)
             if progress:
                 last_progress = t
+            elif early_abort and not sample_every and self._frozen(t):
+                # nothing can ever move again: skip the fruitless plateau
+                # and return exactly what the patient path would
+                t_ret = last_progress + stall_limit + 1
+                if horizon <= t_ret:
+                    res = self._result(
+                        horizon, f"horizon exceeded ({horizon} cycles)",
+                        samples, frame_ends)
+                else:
+                    res = self._result(t_ret, self._diagnose(), samples,
+                                       frame_ends)
+                res.cycles_saved = res.cycles - (t + 1)
+                return res
             t += 1
         return self._result(t, None, samples, frame_ends)
+
+    def _frozen(self, t: int) -> bool:
+        """After a zero-progress cycle: True iff the state can provably
+        never change again.  Three future events could break a stall —
+        an inflight token maturing at a later cycle, a ready-but-throttled
+        module launching once its rate credit refills, or a pop freeing
+        capacity — and a frozen state has none of them.  (A non-throttled
+        ready module is impossible here: it would have launched this
+        cycle, contradicting zero progress.)"""
+        for m in self.active:
+            if m.inflight and m.inflight[0] > t:
+                return False            # matures later
+            if m.launched >= m.out_total:
+                continue
+            k = m.launched + 1
+            needs = m.needs(k)
+            ready = True
+            for j, (e, _) in enumerate(m.in_edges):
+                if m.consumed[j] < needs[j]:
+                    if e.occ > 0:
+                        return False    # poppable next cycle
+                    ready = False
+            if ready:
+                return False            # launches once credit refills
+        return True
 
     @staticmethod
     def _launch(m: _SimMod, t: int) -> None:

@@ -181,7 +181,7 @@ class VectorSim:
             credit=np.zeros(self.M, i64),
             hist=np.zeros((self.H, self.M), i64),
             hwm=np.zeros(self.E, i64), hwm_cycle=np.zeros(self.E, i64),
-            pflag=i64(1), skipped=i64(0),
+            pflag=i64(1), skipped=i64(0), saved=i64(0),
         )
 
     # -- one cycle, numpy (the jit body is a transcription of this) -----
@@ -275,12 +275,16 @@ class VectorSim:
 
     def _jump_numpy(self, s: dict, horizon: int, stall_limit: int) -> None:
         t = int(s["t"])
-        te = min(self._next_event_numpy(s),
-                 int(s["last_progress"]) + stall_limit + 1, horizon)
+        ev = self._next_event_numpy(s)
+        te = min(ev, int(s["last_progress"]) + stall_limit + 1, horizon)
         te = max(te, t)
         dt = te - t
         if dt == 0:
             return
+        if ev > te:
+            # no future event before the clamp: a provably dead state —
+            # these skipped cycles are the deadlock early-abort's win
+            s["saved"] = np.int64(int(s["saved"]) + dt)
         # ring slot r's most recent cycle <= te-1; rows belonging to the
         # skipped cycles [t, te-1] are rewritten with the frozen counts
         r = np.arange(self.H)
@@ -442,12 +446,13 @@ class VectorSim:
         return SimResult(t, sink_tokens, deadlock, occ, frames=self.frames,
                          frame_ends=[int(x) for x in frame_ends],
                          engine="vector",
-                         cycles_skipped=int(s["skipped"]))
+                         cycles_skipped=int(s["skipped"]),
+                         cycles_saved=int(s["saved"]))
 
 
 _STATE_KEYS = ("t", "last_progress", "occ", "consumed", "kf", "fr",
                "launched", "pushed", "credit", "hist", "hwm", "hwm_cycle",
-               "pflag", "skipped")
+               "pflag", "skipped", "saved")
 
 
 def _segment_impl(consts, state, seg_target, frames, H, horizon,
@@ -483,7 +488,7 @@ def _segment_impl(consts, state, seg_target, frames, H, horizon,
 
     def code_of(state):
         (t, last_progress, occ, consumed, kf, fr, launched, pushed,
-         credit, hist, hwm, hwm_cycle, pflag, skipped) = state
+         credit, hist, hwm, hwm_cycle, pflag, skipped, saved) = state
         done = jnp.all(jnp.where(is_sink, launched >= tot, True))
         at_target = jnp.where(
             sink0 >= 0, launched[jnp.maximum(sink0, 0)] >= seg_target, False)
@@ -495,7 +500,7 @@ def _segment_impl(consts, state, seg_target, frames, H, horizon,
 
     def body(state):
         (t, last_progress, occ, consumed, kf, fr, launched, pushed,
-         credit, hist, hwm, hwm_cycle, pflag, skipped) = state
+         credit, hist, hwm, hwm_cycle, pflag, skipped, saved) = state
         # phase A (order matters: mirrors the scalar engine exactly)
         full = occ >= cap
         blocked = (out_adj @ full.astype(jnp.int64)) > 0
@@ -534,14 +539,14 @@ def _segment_impl(consts, state, seg_target, frames, H, horizon,
         last_progress = jnp.where(progress, t, last_progress)
         return (t + 1, last_progress, occ, consumed, kf, fr, launched,
                 pushed, credit, hist, hwm, hwm_cycle,
-                progress.astype(jnp.int64), skipped)
+                progress.astype(jnp.int64), skipped, saved)
 
     def jump_fn(state):
         # transcription of VectorSim._next_event_numpy + _jump_numpy: the
         # last executed cycle was a no-op, so every enabling condition is
         # frozen until a maturation or credit-refill event
         (t, last_progress, occ, consumed, kf, fr, launched, pushed,
-         credit, hist, hwm, hwm_cycle, pflag, skipped) = state
+         credit, hist, hwm, hwm_cycle, pflag, skipped, saved) = state
         full = occ >= cap
         blocked = (out_adj @ full.astype(jnp.int64)) > 0
         cand = active & has_out & ~blocked & (pushed < launched)
@@ -565,12 +570,15 @@ def _segment_impl(consts, state, seg_target, frames, H, horizon,
         gap = rden - credit
         d_cred = jnp.maximum(0, -((-gap) // jnp.maximum(rnum, 1)) - 1)
         te_cred = jnp.where(cred, t + d_cred, _INF)
-        te = jnp.minimum(jnp.min(te_mat, initial=_INF),
+        ev = jnp.minimum(jnp.min(te_mat, initial=_INF),
                          jnp.min(te_cred, initial=_INF))
-        te = jnp.minimum(jnp.minimum(te, last_progress + stall_limit + 1),
+        te = jnp.minimum(jnp.minimum(ev, last_progress + stall_limit + 1),
                          horizon)
         te = jnp.maximum(te, t)
         dt = te - t
+        # no event before the clamp => provably dead state: the skipped
+        # cycles are the deadlock early-abort's win, reported separately
+        saved = saved + jnp.where(ev > te, dt, 0)
         r = jnp.arange(Hs, dtype=jnp.int64)
         x_r = (te - 1) - ((te - 1 - r) % H)
         hist = jnp.where((x_r >= t)[:, None], launched[None, :], hist)
@@ -578,11 +586,11 @@ def _segment_impl(consts, state, seg_target, frames, H, horizon,
             throt, jnp.minimum(credit + dt * rnum, rden), credit)
         return (te, last_progress, occ, consumed, kf, fr, launched,
                 pushed, credit, hist, hwm, hwm_cycle,
-                jnp.int64(1), skipped + dt)
+                jnp.int64(1), skipped + dt, saved)
 
     def resume_fn(state):
         # jump disabled: just rearm the inner loop to step the next cycle
-        return state[:12] + (jnp.int64(1), state[13])
+        return state[:12] + (jnp.int64(1), state[13], state[14])
 
     def stepping(state):
         return state[12] == 1

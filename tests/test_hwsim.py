@@ -17,7 +17,7 @@ from repro.core import CompileOptions, SimOptions, compile_pipeline
 from repro.hwsim import VectorSim, allocate_fifos, area_units, compare, \
     fifo_area
 from repro.hwsim.sim import (CycleSim, _need_proportional, _SimEdge,
-                             _SimMod, simulate)
+                             _SimMod, build_sim, simulate)
 
 # smaller-than-bench instances: tier-1 steps every module every cycle
 SIZES = {
@@ -238,23 +238,33 @@ def test_event_jump_bit_identical(designs, name, jit):
 
 
 def test_event_jump_pyramid_deadlock_path():
-    """PYRAMID's analytic depths deadlock (the solver's known gap): the
+    """PYRAMID's analytic depths are deadlock-free since the cross-arm
+    broadcast provisioning; shrinking the fanout's residue edge back to
+    depth 0 reinstates the classic broadcast-residue wedge.  The
     event-jump must leap the stall tail on this real netlist and still
     report the identical diagnosis and signature as scalar and jump-off
-    runs."""
+    runs — and both fast paths (the vector event-jump and the scalar
+    frozen-state early-abort) must report their savings."""
     uf, T, _ = SIM_CASES["pyramid"]()
     design = compile_pipeline(uf, T=T)
+    assert simulate(design, engine="scalar").deadlock is None  # as shipped
     depths = dict(design.fifo.depth)
-    ref = simulate(design, engine="scalar")
+    depths[(6, 1)] = 0                 # reinstate the residue deadlock
+    ref = build_sim(design.modules, design.edges, depths).run()
+    patient = build_sim(design.modules, design.edges, depths).run(
+        early_abort=False)
     on = VectorSim(design.modules, design.edges,
                    depths).run(event_jump=True)
     off = VectorSim(design.modules, design.edges,
                     depths).run(event_jump=False)
     assert ref.deadlock is not None
-    assert on.deadlock == off.deadlock == ref.deadlock
-    assert on.cycles == off.cycles == ref.cycles
-    assert _edge_sig(on) == _edge_sig(off) == _edge_sig(ref)
+    assert on.deadlock == off.deadlock == ref.deadlock == patient.deadlock
+    assert on.cycles == off.cycles == ref.cycles == patient.cycles
+    assert _edge_sig(on) == _edge_sig(off) == _edge_sig(ref) \
+        == _edge_sig(patient)
     assert on.cycles_skipped > 0 and off.cycles_skipped == 0
+    assert ref.cycles_saved > 0 and patient.cycles_saved == 0
+    assert on.cycles_saved > 0       # the clamped jump is the dead tail
 
 
 @pytest.mark.parametrize("jit", [True, False])
@@ -400,29 +410,40 @@ def test_fifo_solver_sim_area_never_exceeds_analytic(designs):
 
 
 def test_fifo_solver_sim_repairs_pyramid_deadlock():
-    """PYRAMID's analytic depths deadlock (the fanout edge of the
+    """PYRAMID's analytic depths used to deadlock (the fanout edge of the
     reconvergent down/up-sample diamond must absorb a whole resampling
-    phase of skew the per-edge slack model never sees).  The sim solver's
-    upward search must grow exactly those edges, install a proven
-    allocation, and the cross-check oracle must accept the grown install
-    (upper arm = max(analytic, installed) + 1)."""
+    phase of cross-arm residue); the trace-algebra provisioning closed
+    that gap, so the sim solver now starts from a live baseline and needs
+    no repair.  The allocator's upward search is still load-bearing for
+    externally-supplied broken depths, so reinstate the residue deadlock
+    by zeroing the fanout's residue edge and check the search grows it
+    back to a proven allocation."""
     uf, T, _ = SIM_CASES["pyramid"]()
-    ana = compile_pipeline(uf, T=T)
-    assert not ana.simulate().completed          # the gap this repairs
-    uf2, T2, _ = SIM_CASES["pyramid"]()
-    design = compile_pipeline(uf2, T=T2,
-                              options=CompileOptions(fifo_solver="sim"))
-    assert design.fifo.solver == "sim" and design.fifo_sim_proven
-    grown = [k for k, d in design.fifo.depth.items()
-             if d > ana.fifo.depth[k]]
-    assert grown, "expected the reconvergent-join FIFOs to grow"
+    design = compile_pipeline(uf, T=T)
     res = design.simulate()
-    assert res.completed
-    assert res.cycles == ana.simulate(unbounded=True).cycles
-    assert any("grown past a deadlocked analytic depth" in n
-               for n in design.notes)
+    assert res.completed                         # analytic is live now
+    free_cycles = design.simulate(unbounded=True).cycles
+    assert res.cycles == free_cycles
+
+    uf2, T2, _ = SIM_CASES["pyramid"]()
+    sim_design = compile_pipeline(uf2, T=T2,
+                                  options=CompileOptions(fifo_solver="sim"))
+    assert sim_design.fifo.solver == "sim" and sim_design.fifo_sim_proven
+    assert not any("grown past a deadlocked analytic depth" in n
+                   for n in sim_design.notes)    # nothing left to repair
+    assert sim_design.simulate().completed
     from repro.analysis.handshake import cross_check
-    assert cross_check(design).ok
+    assert cross_check(sim_design).ok
+
+    # reinstate the broadcast-residue wedge and exercise the repair path
+    design.fifo.depth[(6, 1)] = 0
+    assert not design.simulate().completed
+    alloc = allocate_fifos(design)
+    assert alloc.grown_edges > 0 and alloc.proven
+    assert alloc.depths[(6, 1)] > 0              # grown back past the wedge
+    assert alloc.verified.completed
+    assert alloc.verified.cycles == free_cycles
+    assert any("upward search grew" in n for n in alloc.notes)
 
 
 # ---- needs() cache sentinel (regression) ----

@@ -133,25 +133,64 @@ def test_apps_analytic_bound_is_dynamically_sufficient(name):
         assert need <= ana[key]
 
 
-@pytest.mark.xfail(
-    strict=True,
-    reason="known gap in the analytic FIFO solver: PYRAMID's reconvergent "
-           "Downsample/Upsample diamond needs the fanout edge to absorb a "
-           "whole resampling phase of cross-arm skew, which the per-edge "
-           "slack model (core/buffers.py) never sees — the analytic depths "
-           "deadlock and only the simulation-guided upward search "
-           "(hwsim/allocate.py) repairs them. This spec flips to a plain "
-           "pass the day the solver models cross-arm skew.")
 def test_pyramid_analytic_bound_covers_reconvergent_diamond():
-    """What the solver SHOULD guarantee (and does for the four paper
-    apps above): the analytic allocation completes a frame without
-    deadlock.  Strict-xfail pins the gap — if the solver silently starts
-    provisioning the diamond, this fails XPASS and the xfail gets
-    removed along with the allocator's repair path."""
+    """Formerly a strict xfail pinning the solver's one known gap:
+    PYRAMID's reconvergent Downsample/Upsample diamond needs the fanout
+    edge to absorb a whole resampling phase of cross-arm skew, which the
+    per-edge slack model (core/buffers.py) never sees on its own.  The
+    cross-arm broadcast demand gaps from analysis/traces.py
+    (``broadcast_extra_slots``, fed in through ``solve_buffers``'s
+    ``extra_slots``) provision exactly that residue, so the analytic
+    allocation now completes a frame — and multi-frame steady state —
+    without deadlock, with no simulation-guided repair involved."""
     uf, T, _ = SIM_CASES["pyramid"]()
     design = compile_pipeline(uf, T=T)
     res = simulate(design)
     assert res.deadlock is None
+    # the provisioning is recorded, and it is the residue gap on the
+    # fanout's small-need out-edge (not a blanket inflation)
+    assert any("cross-arm broadcast residue" in n for n in design.notes)
+    res3 = simulate(design, frames=3)
+    assert res3.deadlock is None
+
+
+def test_reconvergent_diamond_with_asymmetric_need_residue():
+    """Synthetic two-arm regression for the broadcast-residue rule with
+    asymmetric latency: a fanout broadcasts n_tok tokens to a hungry arm
+    (needs all of them, behind a latency-8 module) and a sparse arm
+    (needs only a quarter).  The sparse edge must hold the 3/4 residue it
+    receives in lockstep but never pops — exactly the cross-arm gap from
+    ``broadcast_gaps`` — and one slot less deadlocks."""
+    from repro.analysis.traces import broadcast_gaps
+
+    lat, n_tok = 8, 64
+    sparse_need = n_tok // 4
+    gaps = broadcast_gaps(
+        tpf={(0, 1): n_tok, (0, 2): n_tok},
+        need_total={(0, 1): n_tok, (0, 2): sparse_need})
+    assert gaps == {(0, 2): n_tok - sparse_need}
+
+    def build(depth_sparse):
+        f = _SimMod(0, "fanout", "FanOut", Fraction(1), 0, n_tok, False)
+        m = _SimMod(1, "hungry", "Map", Fraction(1), lat, n_tok, False)
+        s = _SimMod(2, "sparse", "Map", Fraction(1), 0, sparse_need, False)
+        e_h = _SimEdge(0, (0, 1), cap=2, token_bits=8)
+        e_s = _SimEdge(1, (0, 2), cap=depth_sparse + 1, token_bits=8)
+        f.out_edges.extend([e_h, e_s])
+        m.in_edges.append((e_h, _need_proportional(n_tok, n_tok)))
+        m.consumed.append(0)
+        # one token per output (a Downsample-like sub-linear need): total
+        # consumption sparse_need < tpf, the rest is dead residue
+        s.in_edges.append((e_s, lambda k: k))
+        s.consumed.append(0)
+        return CycleSim([f, m, s], [e_h, e_s])
+
+    gap = gaps[(0, 2)]
+    ok = build(depth_sparse=gap - 1).run()     # capacity == gap: minimal
+    assert ok.deadlock is None
+    dead = build(depth_sparse=gap - 2).run()   # one slot short: residue
+    assert dead.deadlock is not None           # wedges the fanout forever
+    assert "fanout" in dead.deadlock
 
 
 # ---- the (L, B) trace model on the built-in burst traces ----
